@@ -1,0 +1,66 @@
+"""Table 5 / Fig. 5 (App. C.3): importance-sampling ablation.
+
+Mesh graph, GP-sampled ground truth from a known diffusion kernel,
+observations at 10% of nodes.  Exact diffusion vs principled GRF vs the
+ad-hoc (unnormalised) random-walk kernel.  Claim: exact ≤ GRF ≪ ad-hoc."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features, kernels_exact, modulation, walks
+from repro.gp import exact, mll, posterior
+from repro.graphs import generators, signals
+
+
+def run(fast: bool = True):
+    side = 14 if fast else 30
+    g = generators.grid2d(side, side)
+    n = g.n_nodes
+    k_true = kernels_exact.diffusion_kernel(g, beta=6.0)
+    ytrue = np.array(signals.gp_sample_from_dense_kernel(np.array(k_true), seed=0))
+    rng = np.random.default_rng(0)
+    train = rng.choice(n, max(n // 10, 20), replace=False)
+    y = jnp.asarray(ytrue[train] + 0.1 * rng.standard_normal(len(train)), jnp.float32)
+    test = np.setdiff1d(np.arange(n), train)
+    tn = jnp.asarray(train)
+
+    n_walkers = 100 if fast else 1000
+    l_max = 8
+
+    def eval_mean(mean, var):
+        r = float(posterior.rmse(jnp.asarray(ytrue)[test], mean[test]))
+        nl = float(posterior.gaussian_nlpd(jnp.asarray(ytrue)[test],
+                                           mean[test], var[test]))
+        return r, nl
+
+    rows = []
+
+    # exact diffusion kernel
+    p_ex, k_full = exact.fit_exact_diffusion(g, tn, y, steps=120)
+    m, v = exact.cholesky_posterior(k_full, tn, y, jnp.exp(2 * p_ex["log_sigma_n"]))
+    r, nl = eval_mean(m, v + jnp.exp(2 * p_ex["log_sigma_n"]))
+    rows.append(dict(name="ablation_exact_diffusion", rmse=r, nlpd=nl))
+
+    # GRF vs ad-hoc
+    for label, reweight in (("grf", True), ("adhoc", False)):
+        tr = walks.sample_walks(g, jax.random.PRNGKey(0), n_walkers=n_walkers,
+                                p_halt=0.1, l_max=l_max, reweight=reweight)
+        mod = modulation.diffusion(l_max=l_max)
+        res = mll.fit_hyperparams(features.take_rows(tr, tn), mod, y, n,
+                                  jax.random.PRNGKey(1), steps=60, lr=0.08)
+        f = mod(res.params["mod"])
+        s2 = mll.noise_var(res.params)
+        samples = posterior.pathwise_samples(tr, tn, f, s2, y,
+                                             jax.random.PRNGKey(2), n_samples=64)
+        m, v = posterior.predictive_moments_from_samples(samples)
+        r, nl = eval_mean(m, v + s2)
+        rows.append(dict(name=f"ablation_{label}", rmse=r, nlpd=nl))
+
+    rows.append(dict(
+        name="ablation_ordering_ok",
+        grf_worse_than_exact=rows[1]["rmse"] >= rows[0]["rmse"] * 0.8,
+        adhoc_much_worse=rows[2]["rmse"] > rows[1]["rmse"],
+    ))
+    return rows

@@ -1,0 +1,85 @@
+"""§Roofline reporting: reads the dry-run artifacts and emits the
+per-(arch × shape × mesh) three-term roofline table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.hlo_analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "single_pod_16x16") -> list[dict]:
+    d = os.path.join(ART, mesh)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def model_flops(rec: dict) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train incl. backward) or 2·N_active·D
+    (forward-only serving), per device."""
+    n_active = rec.get("active_param_count") or 0
+    chips = 1
+    for v in rec.get("mesh_shape", {}).values():
+        chips *= v
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens / chips
+    tokens = rec["global_batch"]  # one new token per sequence
+    return 2.0 * n_active * tokens / chips
+
+
+def table_rows(mesh: str = "single_pod_16x16") -> list[dict]:
+    rows = []
+    for rec in load_records(mesh):
+        if rec.get("status") != "ok":
+            rows.append(dict(name=f"roofline_{rec['arch']}_{rec['shape']}",
+                             status=rec.get("error", "error")))
+            continue
+        r = rec["roofline"]
+        mf = model_flops(rec) if "kind" in rec else 0.0
+        rows.append(dict(
+            name=f"roofline_{rec['arch']}_{rec['shape']}",
+            compute_s=round(r["compute_s"], 6),
+            memory_s=round(r["memory_s"], 6),
+            collective_s=round(r["collective_s"], 6),
+            dominant=r["dominant"],
+            model_flops_ratio=round(mf / r["flops_per_device"], 4)
+            if r["flops_per_device"] else None,
+        ))
+    return rows
+
+
+def run(fast: bool = True):
+    del fast
+    return table_rows()
+
+
+def print_markdown(mesh: str = "single_pod_16x16"):
+    recs = [r for r in load_records(mesh) if r.get("status") == "ok"]
+    print(f"| arch | shape | compute (s) | memory (s) | collective (s) | "
+          f"dominant | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|")
+    for rec in recs:
+        r = rec["roofline"]
+        mf = model_flops(rec) if "kind" in rec else 0.0
+        ratio = mf / r["flops_per_device"] if r["flops_per_device"] else 0.0
+        print(f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['dominant']} | {ratio:.3f} |")
+
+
+if __name__ == "__main__":
+    import sys
+
+    print_markdown(sys.argv[1] if len(sys.argv) > 1 else "single_pod_16x16")

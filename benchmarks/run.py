@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
+wall-time of the benchmark unit where meaningful (scaling rows) and blank
+for quality metrics; ``derived`` carries the metric payload."""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def _emit(rows):
+    for row in rows:
+        name = row.pop("name")
+        us = row.pop("us_per_call", "")
+        print(f"{name},{us},{json.dumps(row, default=str)}", flush=True)
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from benchmarks import (
+        bench_ablation,
+        bench_bo,
+        bench_classification,
+        bench_regression,
+        bench_scaling,
+        roofline,
+    )
+
+    suites = [
+        ("scaling (Table 1 / Fig 2)", bench_scaling),
+        ("ablation (Table 5)", bench_ablation),
+        ("regression (Fig 3)", bench_regression),
+        ("bo (Fig 4)", bench_bo),
+        ("classification (Table 7)", bench_classification),
+        ("roofline (§Roofline)", roofline),
+    ]
+    for label, mod in suites:
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=fast)
+        except Exception as e:  # noqa: BLE001
+            rows = [dict(name=f"{mod.__name__}_FAILED", error=f"{type(e).__name__}: {e}")]
+        print(f"# {label} ({time.time()-t0:.1f}s)", flush=True)
+        _emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end LM training driver on the shared runtime (deliverable (b)).
+
+    PYTHONPATH=src python examples/train_lm.py --arch h2o-danube-1.8b --preset tiny
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+``tiny`` runs in seconds on CPU; ``100m`` is a ~100M-param llama-style model
+(the deliverable scale — a few hundred steps; expects real accelerators for
+reasonable wall-clock).  Checkpoints under --ckpt; kill + rerun to resume."""
+import argparse
+import dataclasses
+
+from repro.configs import get_config, reduce_config
+from repro.launch.train import train_loop
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def preset_100m() -> ModelConfig:
+    return ModelConfig(
+        name="llama-100m", family="decoder",
+        d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+        stages=((12, (LayerSpec(kind="attn"),)),),
+        remat="none", dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.preset == "100m":
+        cfg = preset_100m()
+    else:
+        cfg = reduce_config(get_config(args.arch))
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} × seq {args.seq}")
+
+    state, history = train_loop(
+        cfg, steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=50,
+        lr=args.lr, global_batch=args.batch, seq_len=args.seq,
+        microbatches=args.microbatches,
+    )
+    for h in history:
+        print(f"  step {h['step']:5d}  loss {h['loss']:.4f}")
+    print("done; final step", int(state.step))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import baselines, thompson  # noqa: F401
+from .thompson import BOState, thompson_sampling  # noqa: F401

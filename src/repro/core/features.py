@@ -1,0 +1,125 @@
+"""GRF feature-matrix operations (paper §3, Thm. 2 Property 1).
+
+Φ ∈ R^{M×N} is stored as a :class:`WalkTrace` (ELL: cols/loads/lens) plus a
+modulation vector ``f``.  All products are O(M·K) where K = n·(l_max+1):
+
+  * ``phi_matvec``     y = Φ u          (gather-reduce over slots)
+  * ``phi_t_matvec``   u = Φᵀ v         (scatter-add over slots)
+  * ``khat_matvec``    y = K̂ v = Φ(Φᵀv) (Thm. 2: O(N) matvec)
+
+The Pallas `ell_spmv` kernel (repro/kernels) is a drop-in backend for the
+gather side; XLA's native scatter-add is kept for the transpose side
+(DESIGN.md §3).  Everything is differentiable w.r.t. ``f``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .walks import WalkTrace
+
+# Set by repro.kernels.ell_spmv.ops.enable() to route gathers through Pallas.
+_PALLAS_SPMV = None
+
+
+def set_pallas_spmv(fn) -> None:
+    global _PALLAS_SPMV
+    _PALLAS_SPMV = fn
+
+
+def feature_values(trace: WalkTrace, f: jax.Array) -> jax.Array:
+    """vals[i,k] = loads[i,k] * f[lens[i,k]] — the GRF entries (Alg. 1 line 8).
+
+    Supports compact traces (bf16 loads / int8 lens): math happens in f32."""
+    return trace.loads.astype(f.dtype) * f[trace.lens.astype(jnp.int32)]
+
+
+def phi_matvec(trace: WalkTrace, f: jax.Array, u: jax.Array) -> jax.Array:
+    """y = Φ u.  u: [N] or [N, R] → y: [M] or [M, R]."""
+    vals = feature_values(trace, f)
+    if _PALLAS_SPMV is not None:
+        return _PALLAS_SPMV(vals, trace.cols, u)
+    gathered = u[trace.cols]  # [M, K] or [M, K, R]
+    if u.ndim == 1:
+        return jnp.einsum("mk,mk->m", vals, gathered)
+    return jnp.einsum("mk,mkr->mr", vals, gathered)
+
+
+def phi_t_matvec(
+    trace: WalkTrace, f: jax.Array, v: jax.Array, n_nodes: int
+) -> jax.Array:
+    """u = Φᵀ v.  v: [M] or [M, R] → u: [n_nodes] or [n_nodes, R]."""
+    vals = feature_values(trace, f)
+    cols = trace.cols.reshape(-1)
+    if v.ndim == 1:
+        contrib = (vals * v[:, None]).reshape(-1)
+        return jnp.zeros((n_nodes,), v.dtype).at[cols].add(contrib)
+    contrib = (vals[..., None] * v[:, None, :]).reshape(-1, v.shape[-1])
+    return jnp.zeros((n_nodes, v.shape[-1]), v.dtype).at[cols].add(contrib)
+
+
+def khat_matvec(trace: WalkTrace, f: jax.Array, v: jax.Array) -> jax.Array:
+    """y = K̂ v = Φ (Φᵀ v) for square Φ (M == N)."""
+    return phi_matvec(trace, f, phi_t_matvec(trace, f, v, trace.n_nodes))
+
+
+def khat_cross_matvec(
+    trace_rows: WalkTrace, trace_cols: WalkTrace, f: jax.Array, v: jax.Array,
+    n_nodes: int,
+) -> jax.Array:
+    """y = K̂[rows, cols] v = Φ_rows (Φ_colsᵀ v) — e.g. K̂_{·,x} in Eq. 12."""
+    return phi_matvec(trace_rows, f, phi_t_matvec(trace_cols, f, v, n_nodes))
+
+
+def take_rows(trace: WalkTrace, rows: jax.Array) -> WalkTrace:
+    """Row-subset of Φ (training-node features Φ_x)."""
+    return WalkTrace(
+        cols=trace.cols[rows], loads=trace.loads[rows], lens=trace.lens[rows]
+    )
+
+
+def materialize_phi(trace: WalkTrace, f: jax.Array, n_nodes: int) -> jax.Array:
+    """Dense Φ [M, n_nodes] — small problems / tests / the 'dense GRF' baseline."""
+    vals = feature_values(trace, f)
+    m = trace.cols.shape[0]
+    out = jnp.zeros((m, n_nodes), vals.dtype)
+    rows = jnp.repeat(jnp.arange(m), trace.slots)
+    return out.at[rows, trace.cols.reshape(-1)].add(vals.reshape(-1))
+
+
+def materialize_khat(trace: WalkTrace, f: jax.Array, n_nodes: int | None = None) -> jax.Array:
+    """Dense K̂ = ΦΦᵀ — the paper's 'GRFs (Dense)' baseline (Table 1)."""
+    n_nodes = trace.n_nodes if n_nodes is None else n_nodes
+    phi = materialize_phi(trace, f, n_nodes)
+    return phi @ phi.T
+
+
+def khat_diag_approx(trace: WalkTrace, f: jax.Array) -> jax.Array:
+    """Cheap lower bound on diag(K̂): Σ_k vals² (ignores duplicate-column
+    cross terms).  Used only as a Jacobi-style preconditioner, where any SPD
+    approximation is valid."""
+    vals = feature_values(trace, f)
+    return jnp.sum(vals * vals, axis=1)
+
+
+def khat_diag_exact(trace: WalkTrace, f: jax.Array) -> jax.Array:
+    """Exact diag(K̂)_i = ‖φ(i)‖² accounting for duplicate columns.
+
+    O(M·K²); prefer :func:`khat_diag_approx` for large K.
+    """
+    vals = feature_values(trace, f)
+    same = trace.cols[:, :, None] == trace.cols[:, None, :]
+    return jnp.einsum("mk,ml,mkl->m", vals, vals, same.astype(vals.dtype))
+
+
+def nnz_per_row(trace: WalkTrace) -> jax.Array:
+    """Number of distinct nonzero entries per feature (Thm. 1 sparsity)."""
+    # Count distinct columns among slots with nonzero load.
+    def row_nnz(cols, loads):
+        live = loads != 0
+        # Mark first occurrence of each live column.
+        eq = (cols[:, None] == cols[None, :]) & live[None, :] & live[:, None]
+        first = jnp.argmax(eq, axis=1) == jnp.arange(cols.shape[0])
+        return jnp.sum(first & live)
+
+    return jax.vmap(row_nnz)(trace.cols, trace.loads)

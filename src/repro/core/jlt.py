@@ -1,0 +1,37 @@
+"""Johnson–Lindenstrauss + Woodbury linear solver (paper App. B).
+
+Approximates K̂ = ΦΦᵀ by K₁K₁ᵀ with K₁ = ΦG/√m (G Gaussian, m ≪ N), then
+solves (K̂+σ²I)v = b via the m×m Woodbury system — O(N·K·m + m³) here since
+ΦG uses the sparse trace rather than a dense Φ."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import features
+from .walks import WalkTrace
+
+
+@partial(jax.jit, static_argnames=("m", "n_nodes"))
+def jlt_features(
+    trace: WalkTrace, f: jax.Array, key: jax.Array, m: int, n_nodes: int
+) -> jax.Array:
+    """K₁ = ΦG/√m ∈ R^{rows×m} via sparse Φ-matvec against random G.
+
+    ``n_nodes`` is the Φ *column*-space size (the full graph N) — NOT the
+    row count, which differs for training-subset traces."""
+    g = jax.random.normal(key, (n_nodes, m), dtype=jnp.float32)
+    return features.phi_matvec(trace, f, g) / jnp.sqrt(float(m))
+
+
+def woodbury_solve(k1: jax.Array, sigma_n2: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve (K₁K₁ᵀ + σ²I) v = b via Eq. 14/15."""
+    u = k1 / jnp.sqrt(sigma_n2)
+    m = u.shape[1]
+    inner = jnp.eye(m, dtype=u.dtype) + u.T @ u
+    chol = jnp.linalg.cholesky(inner)
+    ub = u.T @ b
+    w = jax.scipy.linalg.cho_solve((chol, True), ub)
+    return (b - u @ w) / sigma_n2

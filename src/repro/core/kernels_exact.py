@@ -1,0 +1,54 @@
+"""Exact dense graph-node kernels (paper's baselines; O(N^3)).
+
+Computed by eigendecomposition of the normalised Laplacian L̃ = I − Ã.
+Only usable for small N — that asymmetry is the paper's point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..graphs.formats import Graph, to_dense
+
+
+def laplacian_eigh(graph: Graph) -> tuple[jax.Array, jax.Array]:
+    """Eigendecomposition of L̃ (spectrum in [0, 2])."""
+    a = to_dense(graph)
+    lap = jnp.eye(graph.n_nodes, dtype=jnp.float64 if jax.config.jax_enable_x64 else jnp.float32) - a
+    evals, evecs = jnp.linalg.eigh(lap)
+    return evals, evecs
+
+
+def diffusion_kernel(
+    graph: Graph, beta: float, sigma_f: float = 1.0,
+    eig: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """K_diff = σ_f · exp(−β L̃)."""
+    evals, evecs = eig if eig is not None else laplacian_eigh(graph)
+    return sigma_f * (evecs * jnp.exp(-beta * evals)) @ evecs.T
+
+
+def matern_kernel(
+    graph: Graph, nu: float, kappa: float, sigma_f: float = 1.0,
+    eig: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """K_Matérn ∝ σ_f · (2ν/κ² + L̃)^{−ν}, normalised to unit mean diagonal."""
+    evals, evecs = eig if eig is not None else laplacian_eigh(graph)
+    spec = (2.0 * nu / kappa**2 + evals) ** (-nu)
+    k = (evecs * spec) @ evecs.T
+    return sigma_f * k / jnp.mean(jnp.diag(k))
+
+
+def truncated_power_series_kernel(graph: Graph, f: jax.Array) -> jax.Array:
+    """Exact E[K̂] under walk truncation: K = Ψ_truncᵀ Ψ_trunc with
+    Ψ_trunc = Σ_{l≤l_max} f_l Ã^l.  This is the *exact* target of the GRF
+    Monte-Carlo estimator used by unbiasedness tests (DESIGN.md §6)."""
+    a = to_dense(graph)
+    n = graph.n_nodes
+    psi = jnp.zeros((n, n), a.dtype)
+    power = jnp.eye(n, dtype=a.dtype)
+    for l in range(f.shape[0]):
+        psi = psi + f[l] * power
+        if l + 1 < f.shape[0]:
+            power = power @ a
+    return psi.T @ psi

@@ -1,0 +1,113 @@
+"""Modulation functions f_l for GRF kernels (paper §2, App. C.4).
+
+A modulation function is the 'deconvolution' of the kernel's power-series
+coefficients: with Ψ = Σ_l f_l Ã^l we have ΨᵀΨ = K_α where
+α_r = Σ_l f_l f_{r-l}.  The GP covariance is estimated as K̂ = ΦΦᵀ with
+E[Φ] = Ψ, so hyperparameter gradients flow only through the (tiny) vector
+``f = (f_0, ..., f_{l_max})`` — walks never need re-sampling (DESIGN.md §3).
+
+Parameterisations (all return f scaled by √σ_f so K̂ carries σ_f² overall):
+  * diffusion-shape: f_l = √σ_f · e^{-β/2} (β/2)^l / l!   → K = σ_f exp(-β L̃)
+  * matern-shape:    f_l = √σ_f·c·Γ(ν/2+l)/(Γ(ν/2) l!) x^l with x = 1/(1+2ν/κ²)
+                      → K ∝ σ_f (2ν/κ² + L̃)^{-ν}
+  * learnable:       f_l free (the paper's fully-learnable GRF kernel)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Modulation:
+    """A named, differentiable map params → f ∈ R^{l_max+1}."""
+
+    name: str
+    l_max: int
+    fn: Callable[[dict], jax.Array]
+    init: Callable[[jax.Array], dict]  # key -> params
+
+    def __call__(self, params: dict) -> jax.Array:
+        return self.fn(params)
+
+
+def _log_factorials(l_max: int) -> jax.Array:
+    return jax.lax.cumsum(jnp.log(jnp.maximum(jnp.arange(l_max + 1.0), 1.0)))
+
+
+def diffusion(l_max: int, init_beta: float = 1.0) -> Modulation:
+    """Diffusion-shape modulation; learnable lengthscale β and variance σ_f."""
+    log_fact = _log_factorials(l_max)
+
+    def fn(params):
+        beta = jnp.exp(params["log_beta"])
+        sigma_f = jnp.exp(params["log_sigma_f"])
+        ls = jnp.arange(l_max + 1.0)
+        logf = -beta / 2.0 + ls * jnp.log(beta / 2.0) - log_fact
+        return jnp.sqrt(sigma_f) * jnp.exp(logf)
+
+    def init(key):
+        del key
+        return {
+            "log_beta": jnp.log(jnp.asarray(init_beta, jnp.float32)),
+            "log_sigma_f": jnp.asarray(0.0, jnp.float32),
+        }
+
+    return Modulation("diffusion", l_max, fn, init)
+
+
+def matern(l_max: int, nu: float = 1.5, init_kappa: float = 1.0) -> Modulation:
+    """Matérn-shape modulation with fixed smoothness ν, learnable κ, σ_f."""
+    log_fact = _log_factorials(l_max)
+    ls = jnp.arange(l_max + 1.0)
+    # log Γ(ν/2+l) − log Γ(ν/2) as a cumulative sum of log(ν/2 + k).
+    half_nu = nu / 2.0
+    log_poch = jnp.concatenate(
+        [jnp.zeros(1), jnp.cumsum(jnp.log(half_nu + jnp.arange(l_max)))]
+    )
+
+    def fn(params):
+        kappa = jnp.exp(params["log_kappa"])
+        sigma_f = jnp.exp(params["log_sigma_f"])
+        x = 1.0 / (1.0 + 2.0 * nu / kappa**2)
+        logf = log_poch - log_fact + ls * jnp.log(x)
+        # c = (1-x)^{ν/2} normalises so that K(i,i) ≈ σ_f at lengthscale → 0.
+        logc = half_nu * jnp.log1p(-x)
+        return jnp.sqrt(sigma_f) * jnp.exp(logc + logf)
+
+    def init(key):
+        del key
+        return {
+            "log_kappa": jnp.log(jnp.asarray(init_kappa, jnp.float32)),
+            "log_sigma_f": jnp.asarray(0.0, jnp.float32),
+        }
+
+    return Modulation("matern", l_max, fn, init)
+
+
+def learnable(l_max: int, init_scale: float = 0.3, decay: float = 0.5) -> Modulation:
+    """Fully-learnable modulation (the paper's best-performing kernel).
+
+    Initialised to a geometric decay + noise so early training is stable.
+    """
+
+    def fn(params):
+        return params["f"]
+
+    def init(key):
+        base = init_scale * decay ** jnp.arange(l_max + 1.0)
+        noise = 0.05 * jax.random.normal(key, (l_max + 1,))
+        f = (base + noise).astype(jnp.float32)
+        return {"f": f.at[0].set(1.0)}
+
+    return Modulation("learnable", l_max, fn, init)
+
+
+REGISTRY = {
+    "diffusion": diffusion,
+    "matern": matern,
+    "learnable": learnable,
+}

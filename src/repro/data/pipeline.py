@@ -1,0 +1,48 @@
+"""Deterministic host data pipeline with a checkpointable cursor.
+
+Synthetic LM token streams (offline container): tokens are a seeded hash of
+(stream seed, step, position), so any host can regenerate any step — this is
+what makes drop-and-respawn straggler handling safe (DESIGN.md §5): a
+restarted host resumes from the checkpointed cursor and reproduces the exact
+global batch."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    step: int = 0                    # checkpointable cursor
+    enc_seq: int = 0                 # whisper frame stub
+    n_vis_tokens: int = 0            # vision patch stub
+    d_model: int = 0
+
+    def next_batch(self) -> dict:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, self.step]))
+        toks = rng.integers(
+            0, self.vocab_size, (self.global_batch, self.seq_len + 1), dtype=np.int32
+        )
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.enc_seq:
+            batch["enc_input"] = rng.standard_normal(
+                (self.global_batch, self.enc_seq, self.d_model)
+            ).astype(np.float32)
+        if self.n_vis_tokens:
+            batch["vis_input"] = rng.standard_normal(
+                (self.global_batch, self.n_vis_tokens, self.d_model)
+            ).astype(np.float32)
+        self.step += 1
+        return batch
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def restore(self, state: dict):
+        self.seed = int(state["seed"])
+        self.step = int(state["step"])

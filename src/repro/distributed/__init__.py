@@ -1,0 +1,1 @@
+from .gp_shard import sharded_cg_solve, sharded_posterior_sample  # noqa: F401

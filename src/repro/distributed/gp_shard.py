@@ -1,0 +1,166 @@
+"""Distributed GRF-GP: row-sharded features + psum-per-iteration CG.
+
+The paper's O(N^{3/2}) inference expressed as a TPU collective schedule
+(DESIGN.md §3):
+
+  * Φ rows (the WalkTrace) are sharded over the data axes (pod, data);
+    the modulation vector f and scalars replicate.
+  * K̂v = Φ(Φᵀv): Φᵀv is a *local* scatter-add into a full-length partial
+    vector followed by ONE psum (the only per-iteration collective);
+    Φ·(·) is purely local (each device computes its own rows).
+  * CG dot products psum with the same axes.
+
+Per CG iteration the wire traffic is exactly one all-reduce of an N-vector
+(4 MB at N=1M, f32) — independent of walker count, which is why the method
+scales to pods."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import features
+from ..core.walks import WalkTrace
+from ..gp.cg import cg_solve, cg_solve_fixed
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sharded_khat_matvec_fn(n_nodes: int, axes: Sequence[str], sigma_n2, f,
+                           compress: bool = False):
+    """Local-rows matvec closure used inside shard_map.
+
+    ``compress`` casts the per-iteration N-vector all-reduce to bf16.
+    §Perf verdict: REFUTED as a wire optimisation — jax/XLA upcasts bf16
+    psum operands to f32 before the all-reduce (verified in HLO:
+    ``f32[...] all-reduce(convert(...))``), so wire bytes are unchanged.
+    Kept for documentation; true compression needs a custom collective
+    (bf16 all-gather + local reduction) — future work."""
+
+    def mv(trace_local: WalkTrace, v_local):
+        partial = features.phi_t_matvec(trace_local, f, v_local, n_nodes)
+        if compress:
+            full = jax.lax.psum(partial.astype(jnp.bfloat16), axes).astype(
+                jnp.float32
+            )
+        else:
+            full = jax.lax.psum(partial, axes)
+        return features.phi_matvec(trace_local, f, full) + sigma_n2 * v_local
+
+    return mv
+
+
+def sharded_cg_solve(
+    trace: WalkTrace,
+    f: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    sigma_n2: float = 0.1,
+    tol: float = 1e-5,
+    max_iters: int = 256,
+    fixed_unrolled: bool = False,
+    compress: bool = False,
+):
+    """Solve (K̂ + σ²I) v = b with Φ rows sharded over (pod, data).
+
+    ``fixed_unrolled`` runs exactly ``max_iters`` unrolled iterations — used
+    by the dry-run so cost_analysis sees every psum (DESIGN.md §5)."""
+    axes = _data_axes(mesh)
+    n_nodes = trace.n_nodes
+    row = P(axes)
+    rowk = P(axes, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(rowk, rowk, rowk, P(), row),
+        out_specs=row,
+        check_vma=False,
+    )
+    def run(cols, loads, lens, f, b_local):
+        local = WalkTrace(cols, loads, lens)
+        mv = sharded_khat_matvec_fn(n_nodes, axes, sigma_n2, f, compress)
+
+        def dot(u, v):
+            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
+
+        pre = features.khat_diag_approx(local, f) + sigma_n2
+        if fixed_unrolled:
+            res = cg_solve_fixed(
+                lambda v: mv(local, v), b_local,
+                iters=max_iters, precond_diag=pre, dot=dot, unroll=True,
+            )
+        else:
+            res = cg_solve(
+                lambda v: mv(local, v), b_local,
+                tol=tol, max_iters=max_iters, precond_diag=pre, dot=dot,
+            )
+        return res.x
+
+    return run(trace.cols, trace.loads, trace.lens, f, b)
+
+
+def sharded_posterior_sample(
+    trace: WalkTrace,
+    train_mask: jax.Array,     # float32[N]: 1 for observed nodes (row-aligned)
+    f: jax.Array,
+    y_full: jax.Array,         # float32[N]: observations scattered to rows
+    key: jax.Array,
+    mesh: Mesh,
+    sigma_n2: float = 0.1,
+    max_iters: int = 128,
+):
+    """Pathwise posterior sample over all N nodes, fully sharded (Eq. 12).
+
+    Training-set structure is expressed as a mask so every tensor stays
+    row-sharded: H = M K̂ M + D where D = σ² on observed rows, 1e6 outside
+    (infinite noise ⇒ unobserved rows carry no information)."""
+    axes = _data_axes(mesh)
+    n_nodes = trace.n_nodes
+    row = P(axes)
+    rowk = P(axes, None)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(rowk, rowk, rowk, P(), row, row, P()),
+        out_specs=row,
+        check_vma=False,
+    )
+    def run(cols, loads, lens, f, mask, y, key):
+        local = WalkTrace(cols, loads, lens)
+        noise = jnp.where(mask > 0, sigma_n2, 1e6)
+
+        def mv(v):
+            # cg_solve hands us [rows, R]; mask/noise are [rows].
+            m = mask[:, None] if v.ndim == 2 else mask
+            d = noise[:, None] if v.ndim == 2 else noise
+            partial = features.phi_t_matvec(local, f, m * v, n_nodes)
+            full = jax.lax.psum(partial, axes)
+            return m * features.phi_matvec(local, f, full) + d * v
+
+        def dot(u, v):
+            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
+
+        # Prior sample g = Φ w: w is length-N (column space) and must be
+        # identical on every device — derive it from the replicated key.
+        kw, ke = jax.random.split(key)
+        w = jax.random.normal(kw, (n_nodes,), jnp.float32)
+        g = features.phi_matvec(local, f, w)
+        eps = jnp.sqrt(sigma_n2) * jax.random.normal(
+            jax.random.fold_in(ke, jax.lax.axis_index(axes[-1])), g.shape
+        )
+        resid = mask * (y - g - eps)
+        pre = features.khat_diag_approx(local, f) + noise
+        u = cg_solve(mv, resid, tol=1e-5, max_iters=max_iters,
+                     precond_diag=pre, dot=dot).x
+        partial = features.phi_t_matvec(local, f, mask * u, n_nodes)
+        full = jax.lax.psum(partial, axes)
+        return g + features.phi_matvec(local, f, full)
+
+    return run(trace.cols, trace.loads, trace.lens, f, train_mask, y_full, key)

@@ -1,0 +1,128 @@
+"""Batched-RHS conjugate-gradient solver (Lemma 1's workhorse).
+
+Solves H V = B for SPD ``H`` given only a matvec, with per-column scalars so a
+batch of right-hand sides (Eq. 11: [y, z_1, ..., z_S]) shares one loop.
+``lax.while_loop`` + static shapes keep it jit/pjit-compatible; the distributed
+variant (repro/distributed) reuses this loop with psum-reducing dot products.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CGResult(NamedTuple):
+    x: jax.Array          # [N, R] solution
+    iters: jax.Array      # scalar int32 — iterations executed
+    resnorm: jax.Array    # [R] final residual norms
+
+
+def cg_solve(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    tol: float = 1e-5,
+    max_iters: int = 256,
+    precond_diag: jax.Array | None = None,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+) -> CGResult:
+    """Preconditioned CG.
+
+    Args:
+      matvec: V ↦ H V on [N, R] blocks.
+      b: [N] or [N, R] right-hand sides.
+      precond_diag: optional [N] Jacobi preconditioner diagonal (M ≈ diag(H)).
+      dot: column-wise inner product ([N,R],[N,R]) → [R]; override with a
+        psum-reducing version under shard_map.
+    """
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    n, r = b.shape
+    if dot is None:
+        dot = lambda u, v: jnp.sum(u * v, axis=0)
+    if precond_diag is None:
+        apply_m = lambda v: v
+    else:
+        inv = (1.0 / precond_diag)[:, None]
+        apply_m = lambda v: inv * v
+
+    bnorm = jnp.sqrt(dot(b, b))
+    thresh = tol * jnp.maximum(bnorm, 1e-30)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = apply_m(r0)
+    p0 = z0
+    rz0 = dot(r0, z0)
+
+    def cond(state):
+        _, res, _, _, _, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(jnp.sqrt(dot(res, res)) > thresh))
+
+    def body(state):
+        x, res, z, p, rz, it = state
+        hp = matvec(p)
+        php = dot(p, hp)
+        alpha = jnp.where(php > 0, rz / jnp.maximum(php, 1e-30), 0.0)
+        x = x + alpha[None, :] * p
+        res_new = res - alpha[None, :] * hp
+        z_new = apply_m(res_new)
+        rz_new = dot(res_new, z_new)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p_new = z_new + beta[None, :] * p
+        return (x, res_new, z_new, p_new, rz_new, it + 1)
+
+    state = (x0, r0, z0, p0, rz0, jnp.asarray(0, jnp.int32))
+    x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
+    out = x[:, 0] if squeeze else x
+    return CGResult(out, iters, jnp.sqrt(dot(res, res)))
+
+
+def cg_solve_fixed(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    iters: int,
+    precond_diag: jax.Array | None = None,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    unroll: bool = False,
+) -> CGResult:
+    """Fixed-iteration CG via lax.scan (no early exit).
+
+    Used by the dry-run GP cell: with ``unroll=True`` every iteration appears
+    in the compiled HLO, so cost_analysis counts the real FLOPs/collectives
+    (a while-loop body is counted once regardless of trip count)."""
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    if dot is None:
+        dot = lambda u, v: jnp.sum(u * v, axis=0)
+    if precond_diag is None:
+        apply_m = lambda v: v
+    else:
+        inv = (1.0 / precond_diag)[:, None]
+        apply_m = lambda v: inv * v
+
+    x0 = jnp.zeros_like(b)
+    z0 = apply_m(b)
+    state = (x0, b, z0, z0, dot(b, z0))
+
+    def body(state, _):
+        x, res, z, p, rz = state
+        hp = matvec(p)
+        php = dot(p, hp)
+        alpha = jnp.where(php > 0, rz / jnp.maximum(php, 1e-30), 0.0)
+        x = x + alpha[None, :] * p
+        res = res - alpha[None, :] * hp
+        z = apply_m(res)
+        rz_new = dot(res, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p = z + beta[None, :] * p
+        return (x, res, z, p, rz_new), None
+
+    (x, res, *_), _ = jax.lax.scan(
+        body, state, None, length=iters, unroll=iters if unroll else 1
+    )
+    out = x[:, 0] if squeeze else x
+    return CGResult(out, jnp.asarray(iters, jnp.int32), jnp.sqrt(dot(res, res)))

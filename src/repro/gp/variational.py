@@ -1,0 +1,111 @@
+"""Sparse variational GP classification with GRF kernels (paper §4.4, App. C.7).
+
+Multi-class SVGP: C latent GPs share one GRF kernel; q(u_c) = N(μ_c, L_c L_cᵀ)
+over M inducing nodes; softmax likelihood handled by Monte-Carlo ELBO.
+Kernel blocks are assembled from sparse GRF features (K_uu, K_xu are small:
+M×M and T×M), so the per-step cost stays O((T+M)·K·M)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core import features
+from ..core.modulation import Modulation
+from ..core.walks import WalkTrace
+from ..optim.adamw import AdamW
+
+
+def kernel_blocks(trace: WalkTrace, f, inducing, nodes, n_nodes, jitter=1e-4):
+    """K_uu [M,M], K_xu [T,M] from GRF features (dense Φ rows; M,T small)."""
+    phi_u = features.materialize_phi(features.take_rows(trace, inducing), f, n_nodes)
+    phi_x = features.materialize_phi(features.take_rows(trace, nodes), f, n_nodes)
+    k_uu = phi_u @ phi_u.T + jitter * jnp.eye(inducing.shape[0])
+    k_xu = phi_x @ phi_u.T
+    k_xx_diag = jnp.sum(phi_x * phi_x, axis=1)
+    return k_uu, k_xu, k_xx_diag
+
+
+def init_svgp(key, n_inducing: int, n_classes: int, mod: Modulation) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "mod": mod.init(k1),
+        "mu": 0.01 * jax.random.normal(k2, (n_classes, n_inducing)),
+        # Cholesky factor of Σ, parameterised as identity + strictly-lower + log-diag.
+        "log_scale_diag": jnp.zeros((n_classes, n_inducing)) - 2.0,
+        "chol_lower": jnp.zeros((n_classes, n_inducing, n_inducing)),
+    }
+
+
+def _chol_factor(params):
+    lower = jnp.tril(params["chol_lower"], -1)
+    diag = jnp.exp(params["log_scale_diag"])
+    return lower + jax.vmap(jnp.diag)(diag)
+
+
+def elbo(
+    params, key, trace, mod, inducing, nodes, labels, n_nodes, n_classes,
+    n_mc: int = 8, jitter: float = 1e-4,
+):
+    """Monte-Carlo ELBO  Σ E_q[log softmax] − KL(q(u)‖p(u))."""
+    f = mod(params["mod"])
+    k_uu, k_xu, k_xx_diag = kernel_blocks(trace, f, inducing, nodes, n_nodes, jitter)
+    m = inducing.shape[0]
+    luu = jnp.linalg.cholesky(k_uu)
+    a = jax.scipy.linalg.solve_triangular(luu, k_xu.T, lower=True)  # [M, T]
+
+    s_chol = _chol_factor(params)  # [C, M, M]
+    mu = params["mu"]  # [C, M]
+
+    # Marginal q(h_c(x)): mean = Aᵀ L⁻¹... (whitened parameterisation)
+    mean = jnp.einsum("mt,cm->tc", a, mu)
+    av = jnp.einsum("mt,cmk->tck", a, s_chol)
+    var = k_xx_diag[:, None] - jnp.sum(a * a, axis=0)[:, None] + jnp.sum(av * av, axis=2)
+    var = jnp.maximum(var, 1e-8)
+
+    eps = jax.random.normal(key, (n_mc, mean.shape[0], n_classes))
+    h = mean[None] + jnp.sqrt(var)[None] * eps
+    logp = jax.nn.log_softmax(h, axis=-1)
+    ll = jnp.mean(jnp.take_along_axis(logp, labels[None, :, None], axis=-1))
+
+    # KL between q(u)=N(mu, SSᵀ) and whitened prior N(0, I), per class.
+    tr = jnp.sum(s_chol**2, axis=(1, 2))
+    logdet_q = 2 * jnp.sum(params["log_scale_diag"], axis=1)
+    kl = 0.5 * jnp.sum(tr + jnp.sum(mu**2, axis=1) - m - logdet_q)
+    t = nodes.shape[0]
+    return ll * t - kl, {"ll": ll, "kl": kl}
+
+
+def fit_svgp(
+    trace, mod, inducing, nodes, labels, n_nodes, n_classes, key,
+    steps: int = 300, lr: float = 0.05, n_mc: int = 8,
+):
+    k_init, k_loop = jax.random.split(key)
+    params = init_svgp(k_init, inducing.shape[0], n_classes, mod)
+    opt = AdamW(lr=lr)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, k):
+        e, aux = elbo(p, k, trace, mod, inducing, nodes, labels, n_nodes, n_classes, n_mc)
+        return -e, aux
+
+    @jax.jit
+    def step_fn(p, s, k):
+        (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(p, k)
+        p, s = opt.update(g, s, p)
+        return p, s, l
+
+    for i in range(steps):
+        params, opt_state, _ = step_fn(params, opt_state, jax.random.fold_in(k_loop, i))
+    return params
+
+
+def predict_classes(params, trace, mod, inducing, nodes, n_nodes, jitter=1e-4):
+    f = mod(params["mod"])
+    k_uu, k_xu, _ = kernel_blocks(trace, f, inducing, nodes, n_nodes, jitter)
+    luu = jnp.linalg.cholesky(k_uu)
+    a = jax.scipy.linalg.solve_triangular(luu, k_xu.T, lower=True)
+    mean = jnp.einsum("mt,cm->tc", a, params["mu"])
+    return jnp.argmax(mean, axis=1)

@@ -1,0 +1,3 @@
+from .ell_spmv import ell_spmv  # noqa: F401
+from .ops import disable, enable, spmv  # noqa: F401
+from .ref import ell_spmv_ref  # noqa: F401

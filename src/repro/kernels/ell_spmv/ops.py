@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the ELL spmv Pallas kernel.
+
+``enable()`` routes repro.core.features.phi_matvec through the kernel
+(interpret mode on CPU; compiled Mosaic on real TPUs)."""
+from __future__ import annotations
+
+import jax
+
+from ...core import features
+from .ell_spmv import ell_spmv
+from .ref import ell_spmv_ref
+
+
+def spmv(vals, cols, u, *, use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return ell_spmv_ref(vals, cols, u)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ell_spmv(vals, cols, u, interpret=interpret)
+
+
+def enable(interpret: bool | None = None) -> None:
+    """Route GRF Φ-matvecs through the Pallas kernel."""
+    features.set_pallas_spmv(
+        lambda vals, cols, u: spmv(vals, cols, u, interpret=interpret)
+    )
+
+
+def disable() -> None:
+    features.set_pallas_spmv(None)

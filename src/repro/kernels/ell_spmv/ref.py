@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the ELL sparse matvec (y = Φ u, gather side)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """y[m] = Σ_k vals[m,k] · u[cols[m,k]].
+
+    Args:
+      vals: f32[M, K] ELL values (0 for padding slots).
+      cols: i32[M, K] ELL column indices.
+      u: f32[N] or f32[N, R] dense operand.
+    Returns: f32[M] or f32[M, R].
+    """
+    gathered = u[cols]  # [M, K] or [M, K, R]
+    if u.ndim == 1:
+        return jnp.einsum("mk,mk->m", vals, gathered)
+    return jnp.einsum("mk,mkr->mr", vals, gathered)

@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention  # noqa: F401
+from .ops import attention  # noqa: F401
+from .ref import mha_ref  # noqa: F401

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the flash attention Pallas kernel."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import mha_chunked_ref, mha_ref
+
+
+def attention(
+    q, k, v, *, causal=True, window=None, softcap=None,
+    use_pallas: bool = True, interpret: bool | None = None,
+    impl: str | None = None, block_k: int = 1024,
+):
+    """Dispatch between backends.
+
+    impl: 'pallas' (TPU kernel / interpret), 'chunked' (pure-XLA
+    online-softmax scan — O(Sq·block) memory, lowers on any backend),
+    'ref' (dense oracle).  Decode (Sq == 1) always uses the dense path —
+    memory-bound, the MXU would idle.
+    """
+    if q.shape[2] == 1:
+        return mha_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    if impl is None:
+        impl = "pallas" if use_pallas else "ref"
+    if impl == "chunked":
+        return mha_chunked_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_k=block_k)
+    if impl == "ref" or not use_pallas:
+        return mha_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, interpret=interpret
+    )

@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for blocked flash attention (MHA/GQA, window, softcap)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jnp.ndarray,                # [B, H, Sq, D]
+    k: jnp.ndarray,                # [B, Hkv, Skv, D]
+    v: jnp.ndarray,                # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,     # sliding-window size (None = unbounded)
+    softcap: float | None = None,  # gemma2-style logit soft-capping
+    q_offset: int = 0,             # global position of q[0] (decode/prefill-chunk)
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / jnp.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def mha_chunked_ref(
+    q, k, v, *, causal=True, window=None, softcap=None, q_offset=0,
+    block_k: int = 1024,
+):
+    """Flash-style attention as a pure-XLA lax.scan over KV blocks.
+
+    Same semantics as :func:`mha_ref` but O(Sq·block_k) live memory instead
+    of O(Sq·Skv): the online-softmax state (m, l, acc) is carried across KV
+    blocks.  This is the §Perf 'chunked' backend used where the Pallas
+    kernel cannot lower (CPU dry-run) and for 32k+ prefill."""
+    import jax
+
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bk = min(block_k, skv)
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = (skv + pad) // bk
+
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    kb = k.astype(jnp.float32).reshape(b, hkv, nblk, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, hkv, nblk, bk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, inp):
+        m, l, acc, blk = carry[0], carry[1], carry[2], carry[3]
+        k_c, v_c = inp
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k_c) / jnp.sqrt(d)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = blk * bk + jnp.arange(bk)[None, :]
+        mask = kpos < skv
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_c)
+        return (m_new, l, acc, blk + 1), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.asarray(0)), (kb, vb))
+    safe = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / safe[..., None]).reshape(b, h, sq, d)
+    return o.astype(q.dtype)

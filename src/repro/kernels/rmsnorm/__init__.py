@@ -1,0 +1,3 @@
+from .ops import apply  # noqa: F401
+from .ref import rmsnorm_ref  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

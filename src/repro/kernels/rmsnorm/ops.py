@@ -1,0 +1,16 @@
+"""jit'd wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm
+
+
+def apply(x, scale, eps: float = 1e-6, use_pallas: bool = True,
+          interpret: bool | None = None):
+    if not use_pallas:
+        return rmsnorm_ref(x, scale, eps)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rmsnorm(x, scale, eps=eps, interpret=interpret)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused RMSNorm (every block's prologue).
+
+One pass: each grid step loads a [BM, D] row tile into VMEM, computes the
+f32 row RMS on the VPU and writes the scaled tile — x is read from HBM once
+and the normalised intermediate never round-trips (XLA emits the same fused
+loop on TPU for simple cases; the kernel guarantees it and is the substrate
+for fusing further epilogues, e.g. the QKV matmul's lhs cast)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps):
+    x = x_ref[:].astype(jnp.float32)                  # [BM, D]
+    var = jnp.mean(x * x, axis=1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[:] = (y * (1.0 + scale_ref[:].astype(jnp.float32))[None, :]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_m", "interpret"))
+def rmsnorm(
+    x: jax.Array,            # [..., D]
+    scale: jax.Array,        # [D]
+    eps: float = 1e-6,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xm = x.reshape(-1, d)
+    m = xm.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        xm = jnp.pad(xm, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((m + pad) // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, d), x.dtype),
+        interpret=interpret,
+    )(xm, scale)
+    return out[:m].reshape(orig_shape)

@@ -1,0 +1,2 @@
+from . import hlo_analysis, mesh, sharding  # noqa: F401
+from .mesh import make_host_mesh, make_production_mesh  # noqa: F401

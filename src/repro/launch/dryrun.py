@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS lines
+# above must be the very first statements (jax locks device count at first
+# init), and __future__ imports must lead a module.
+
+DOC = """Multi-pod dry-run driver (deliverable (e)).
+
+For every (architecture × input shape) cell and both production meshes
+(single-pod 16×16, multi-pod 2×16×16), this:
+  1. builds the step function + ShapeDtypeStruct inputs (no allocation),
+  2. ``jax.jit(fn).lower(*args).compile()`` — proving the sharding config is
+     coherent end-to-end (SPMD partitioning, collective lowering, memory),
+  3. records memory_analysis / cost_analysis / parsed collective traffic to
+     ``artifacts/dryrun/<mesh>/<arch>__<shape>.json`` for §Roofline.
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch gemma3-4b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both            # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --gp                   # GRF-GP cell
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import get_config, list_archs
+from ..models.config import SHAPES
+from . import hlo_analysis, specs
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def cell_list(arch_filter=None, shape_filter=None):
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.subquadratic:
+                continue  # documented skip (DESIGN.md §4)
+            if arch_filter and arch != arch_filter:
+                continue
+            if shape_filter and shape != shape_filter:
+                continue
+            cells.append((arch, shape))
+    return cells
+
+
+def _compile_summary(cfg, shape, mesh) -> dict:
+    from . import sharding as shr
+
+    fn, args = specs.build_cell(cfg, shape, mesh)
+    shr.set_activation_mesh(mesh)
+    try:
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+            return hlo_analysis.summarize_compiled(compiled)
+    finally:
+        shr.set_activation_mesh(None)
+
+
+def _double_stage(cfg, si: int):
+    """Cost probe: duplicate stage ``si``'s pattern (body FLOPs double)."""
+    import dataclasses
+    stages = list(cfg.stages)
+    repeat, pattern = stages[si]
+    stages[si] = (repeat, tuple(pattern) + tuple(pattern))
+    return dataclasses.replace(cfg, stages=tuple(stages))
+
+
+def _delta(p, base):
+    return {
+        "flops": max(p["cost"].get("flops", 0.0) - base["cost"].get("flops", 0.0), 0.0),
+        "bytes": max(p["cost"].get("bytes accessed", 0.0)
+                     - base["cost"].get("bytes accessed", 0.0), 0.0),
+        "wire": max(p["collectives"]["total_wire_bytes"]
+                    - base["collectives"]["total_wire_bytes"], 0.0),
+        "cbytes": max(p["collectives"]["total_bytes"]
+                      - base["collectives"]["total_bytes"], 0.0),
+    }
+
+
+def _corrected_summary(cfg, shape, mesh) -> dict:
+    """Trip-count-corrected costs (DESIGN.md §5).
+
+    XLA cost_analysis counts a while (scan) body ONCE regardless of trip
+    count.  Layer scans stay rolled (fast compiles, deployment-true
+    memory_analysis); true totals are recovered with cost probes:
+
+      stage probe  : body_s = cost(double stage s pattern) − cost(base)
+                     corrected += (repeat_s − 1) · body_s
+      chunk probe  : SSD chunk scans (mamba) — chunk = cost(unroll=2) − base,
+                     corrected += Σ_s repeat_s·(trips − 1)·chunk_s
+                     (chunk split over stages ∝ mamba layers per pattern)
+      encoder probe: whisper encoder body via enc_pattern_mult=2.
+    """
+    import dataclasses
+
+    from ..models.config import SHAPES as _SHAPES
+
+    base = _compile_summary(cfg, shape, mesh)
+    flops = base["cost"].get("flops", 0.0)
+    wire = base["collectives"]["total_wire_bytes"]
+    cbytes = base["collectives"]["total_bytes"]
+    bytes_acc = base["cost"].get("bytes accessed", 0.0)
+
+    probes = []
+    for si, (repeat, _) in enumerate(cfg.stages):
+        if repeat <= 1:
+            continue
+        p = _compile_summary(_double_stage(cfg, si), shape, mesh)
+        probes.append((f"stage{si}", repeat - 1, _delta(p, base)))
+    if cfg.n_enc_layers > 1:
+        p = _compile_summary(
+            dataclasses.replace(cfg, enc_pattern_mult=2), shape, mesh
+        )
+        probes.append(("encoder", cfg.n_enc_layers - 1, _delta(p, base)))
+
+    # Chunked-attention correction: the online-softmax lax.scan over KV
+    # blocks is another while body counted once.  body(bk) ∝ bk, so
+    # body = cost(2·bk) − cost(bk) and corrected += (trips−1)·body.
+    if cfg.attn_impl == "chunked" and _SHAPES[shape]["kind"] in ("train", "prefill"):
+        skv = _SHAPES[shape]["seq_len"]
+        trips = max(skv // cfg.attn_block_k, 1)
+        if trips > 1:
+            p = _compile_summary(
+                dataclasses.replace(cfg, attn_block_k=2 * cfg.attn_block_k),
+                shape, mesh,
+            )
+            probes.append(("attn_chunks", trips - 1, _delta(p, base)))
+
+    # SSD chunk correction (train/prefill only; decode is recurrent).
+    mamba_counts = [
+        (r, sum(1 for sp in pat if sp.kind == "mamba")) for r, pat in cfg.stages
+    ]
+    n_mamba_bodies = sum(m for _, m in mamba_counts)
+    kind = _SHAPES[shape]["kind"]
+    if n_mamba_bodies and kind in ("train", "prefill"):
+        seq = _SHAPES[shape]["seq_len"]
+        trips = max(seq // cfg.ssm_chunk, 1)
+        if trips > 1:
+            p = _compile_summary(
+                dataclasses.replace(cfg, scan_unroll=2), shape, mesh
+            )
+            chunk_all = _delta(p, base)  # Σ over stage bodies (once each)
+            # Σ_s repeat_s·(trips−1)·chunk_s with chunk_s ∝ mamba layers:
+            weight = sum(r * m for r, m in mamba_counts) / n_mamba_bodies
+            probes.append(("ssd_chunks", (trips - 1) * weight, chunk_all))
+
+    for _, mult, body in probes:
+        flops += mult * body["flops"]
+        bytes_acc += mult * body["bytes"]
+        wire += mult * body["wire"]
+        cbytes += mult * body["cbytes"]
+
+    base["cost"]["flops"] = flops
+    base["cost"]["bytes accessed"] = bytes_acc
+    base["collectives"]["total_wire_bytes"] = wire
+    base["collectives"]["total_bytes"] = cbytes
+    base["roofline"] = hlo_analysis.roofline_terms(
+        base["cost"], base["collectives"]
+    )
+    base["probes"] = [
+        {"probe": s, "multiplier": r, **b} for s, r, b in probes
+    ]
+    return base
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str, out_dir: str,
+             cfg_override=None) -> dict:
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "mesh_shape": dict(mesh.shape)}
+    try:
+        import dataclasses
+        cfg = cfg_override or get_config(arch)
+        record.update(_corrected_summary(cfg, shape, mesh))
+        record["param_count"] = cfg.param_count()
+        record["active_param_count"] = cfg.active_param_count()
+        record["seq_len"] = SHAPES[shape]["seq_len"]
+        record["global_batch"] = SHAPES[shape]["global_batch"]
+        record["kind"] = SHAPES[shape]["kind"]
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record, don't abort the matrix
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["compile_seconds"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def run_gp_cell(mesh, mesh_name: str, out_dir: str, compress: bool = False,
+                compact: bool = False) -> dict:
+    t0 = time.time()
+    record = {"arch": "grf-gp", "shape": "cg_1m", "mesh": mesh_name,
+              "mesh_shape": dict(mesh.shape), "compress": compress,
+              "compact": compact}
+    try:
+        fn, args = specs.build_gp_cell(mesh, compress=compress, compact=compact)
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+            record.update(hlo_analysis.summarize_compiled(compiled))
+        record["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["compile_seconds"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "grf-gp__cg_1m.json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--gp", action="store_true", help="run the GRF-GP cell only")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    for mesh_name, mesh in meshes:
+        out_dir = os.path.join(args.out, mesh_name)
+        if args.gp:
+            rec = run_gp_cell(mesh, mesh_name, out_dir)
+            print(f"[{mesh_name}] grf-gp/cg_1m: {rec['status']} "
+                  f"({rec['compile_seconds']}s)", flush=True)
+            continue
+        for arch, shape in cell_list(args.arch, args.shape):
+            rec = run_cell(arch, shape, mesh, mesh_name, out_dir)
+            extra = ""
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']} bound={r['bound_s']:.4f}s"
+                         f" flops/dev={r['flops_per_device']:.3e}")
+            else:
+                extra = f" ERROR {rec['error'][:120]}"
+            print(f"[{mesh_name}] {arch}/{shape}: {rec['status']}"
+                  f" ({rec['compile_seconds']}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

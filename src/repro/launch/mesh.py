@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run driver must set XLA_FLAGS before first init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod (v5e); 2 pods when ``multi_pod``.
+
+    Axes: ``pod`` (inter-pod DP), ``data`` (intra-pod DP / FSDP / ZeRO-1 /
+    sequence-parallel KV), ``model`` (TP / EP)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    n_data = n_data or (n // n_model)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch: ('pod', 'data') when a pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

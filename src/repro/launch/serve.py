@@ -1,0 +1,123 @@
+"""Batched serving launcher: prefill + decode loop with slot management.
+
+A production-shaped (if single-host) serving path on the same runtime as
+training: fixed-capacity request slots, one prefill per admitted request,
+batched single-token decode steps across all live slots, greedy or
+temperature sampling, per-slot stop handling.  The decode step is the same
+``model.decode_step`` the dry-run lowers for the production meshes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # int32[prompt_len]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Fixed-batch serving: admit up to ``batch`` concurrent requests."""
+
+    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
+                 key: jax.Array | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.cache = model.init_cache(cfg, batch, max_len)
+        self.slots: list[Request | None] = [None] * batch
+        self.pos = np.zeros(batch, dtype=np.int32)
+        self.last_token = np.zeros((batch, 1), dtype=np.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, cfg, t, pos)
+        )
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        """Prefill one request into a free slot; False if none free."""
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return False
+        # Static-batch constraint: concurrent prompts share one position
+        # counter, so all admitted prompts must have the same length as the
+        # current wave (continuous batching with per-slot positions would
+        # need a vector ``pos`` in decode_step — future work).
+        live_lens = {int(self.pos[i]) for i, r in enumerate(self.slots) if r}
+        if live_lens and live_lens != {len(req.prompt)}:
+            return False
+        # Single-request prefill (batch=1 cache), then splice into the slot.
+        logits, cache1 = model.prefill(
+            self.params, self.cfg, jnp.asarray(req.prompt[None, :]),
+            max_len=self.max_len,
+        )
+        self.cache = jax.tree.map(
+            lambda full, one: _splice(full, one, slot), self.cache, cache1,
+        )
+        self.slots[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot, 0] = int(self._sample(logits[0], req))
+        req.generated.append(int(self.last_token[slot, 0]))
+        return True
+
+    def _sample(self, logits: jax.Array, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / req.temperature))
+
+    # -- decode --------------------------------------------------------------
+    def step(self) -> int:
+        """One batched decode step across live slots; returns #live."""
+        live = [i for i, r in enumerate(self.slots) if r is not None and not r.done]
+        if not live:
+            return 0
+        # All slots share one position counter per step; decode uses the max
+        # and per-slot validity is enforced by each slot's own cache content.
+        pos = int(max(self.pos[i] for i in live))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(pos, jnp.int32),
+        )
+        for i in live:
+            req = self.slots[i]
+            tok = self._sample(logits[i, 0], req)
+            req.generated.append(tok)
+            self.last_token[i, 0] = tok
+            self.pos[i] += 1
+            if len(req.generated) >= req.max_new_tokens or self.pos[i] >= self.max_len - 1:
+                req.done = True
+                self.slots[i] = None
+        return len(live)
+
+    def run(self, requests: list[Request], progress: Callable | None = None):
+        pending = list(requests)
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            n = self.step()
+            if progress:
+                progress(n, len(pending))
+        return requests
+
+
+def _splice(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Insert a batch-1 cache entry into slot ``slot`` of a batched cache.
+
+    Cache leaves have a leading stacked [repeat] axis then batch."""
+    return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype),
+                                               slot, axis=1)

@@ -1,0 +1,238 @@
+"""Named sharding rules: DP / TP / EP / FSDP / ZeRO-1 / sequence-parallel.
+
+Rules are *divisibility-safe* (DESIGN.md §4): for each tensor dim the rule
+proposes a mesh axis and falls back to replication when the dim doesn't
+divide — so every (arch × shape × mesh) cell compiles with a valid (if not
+always optimal) sharding, and §Perf optimises the chosen cells.
+
+Leaf-name → layout table (core dims, before the stacked [repeat] axis that
+all ``stages/...`` leaves carry):
+
+  embed/unembed [V, D]        → (model, fsdp)
+  wq [D,H,hd] wk/wv [D,Hkv,hd]→ (fsdp, model@heads | model@hd, ·)
+  wo [H, hd, D]               → (model, ·, fsdp)
+  gate/up [D, F]              → (fsdp, model)     down [F, D] → (model, fsdp)
+  router [D, E]               → (·, ·)
+  w_gate/w_up [E, D, F]       → (model=EP, fsdp, ·)   w_down [E, F, D] similarly
+  mla: wq_a [D,rq]→(fsdp, model); wq_b [rq,H,·]→(·, model, ·);
+       wkv_a [D, rk+rd]→(fsdp, ·); wk_b/wv_b [rk,H,hd]→(·, model, ·)
+  mamba: in_proj [D, M]→(fsdp, model); conv [dk, C]→(·, model);
+         out_proj [din, D]→(model, fsdp)
+  norms / scalars             → replicated
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (sequence-parallel attention, §Perf).
+# Models are mesh-agnostic; the launcher registers the active mesh and the
+# layers call ``constrain`` with symbolic axes ("batch" → the data axes).
+# No-op when no mesh is registered (local tests, single device).
+# ---------------------------------------------------------------------------
+_ACT_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None) -> None:
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def get_activation_mesh() -> Mesh | None:
+    return _ACT_MESH
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint with divisibility-safe symbolic axes.
+
+    ``axes`` entries: None, a mesh-axis name, a tuple of names, or "batch"
+    (resolves to the present data axes).  Axes that don't divide the dim are
+    dropped rather than erroring."""
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    parts = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "batch":
+            ax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if ax is None:
+            parts.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if not all(n in mesh.axis_names for n in names):
+            parts.append(None)
+            continue
+        total = int(np.prod([mesh.shape[n] for n in names]))
+        parts.append(ax if total and dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+def _div(mesh: Mesh, axis: str | None, dim: int) -> str | None:
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _first_div(mesh, axes: list[str | None], dim: int) -> str | None:
+    for a in axes:
+        got = _div(mesh, a, dim)
+        if got:
+            return got
+    return None
+
+
+def param_spec(
+    name: str, shape: tuple[int, ...], mesh: Mesh, *, fsdp: bool, stacked: bool
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    core = shape[1:] if stacked else shape
+    f = "data" if fsdp else None
+
+    def spec(*axes):
+        axes = [
+            _div(mesh, a, core[i]) if isinstance(a, str) else a
+            for i, a in enumerate(axes)
+        ]
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    if name in ("embed", "unembed"):
+        return spec("model", f)
+    if name == "wq":
+        m1 = _div(mesh, "model", core[1])
+        m2 = None if m1 else _div(mesh, "model", core[2])
+        return spec(f, m1, m2)
+    if name in ("wk", "wv"):
+        m1 = _div(mesh, "model", core[1])
+        m2 = None if m1 else _div(mesh, "model", core[2])
+        return spec(f, m1, m2)
+    if name == "wo":
+        m0 = _div(mesh, "model", core[0])
+        return spec(m0, None if m0 else "model", f)
+    if name in ("gate", "up", "shared_gate", "shared_up"):
+        return spec(f, "model")
+    if name in ("down", "shared_down"):
+        return spec("model", f)
+    if name in ("w_gate", "w_up", "w_down"):
+        return spec("model", f if name != "w_down" else None,
+                    None if name != "w_down" else f)
+    if name == "router":
+        return spec(f, None)
+    if name == "wq_a":
+        return spec(f, "model")
+    if name == "wq_b":
+        return spec(None, "model", None)
+    if name == "wkv_a":
+        return spec(f, None)
+    if name in ("wk_b", "wv_b"):
+        return spec(None, "model", None)
+    if name == "in_proj":
+        return spec(f, "model")
+    if name == "conv_w":
+        return spec(None, "model")
+    if name == "out_proj":
+        return spec("model", f)
+    # norms, biases, scalars (a_log, d_skip, dt_bias, conv_b, q_norm, ...)
+    return spec(*([None] * len(core)))
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _leaf_specs(params: Any, mesh: Mesh, fsdp: bool) -> Any:
+    def rule(path, leaf):
+        keys = [_key_str(k) for k in path]
+        name = keys[-1]
+        stacked = "stages" in keys and name not in ()
+        # shared / encoder / top-level leaves are not stacked
+        if keys[0] in ("embed", "unembed", "final_norm", "shared"):
+            stacked = False
+        return param_spec(name, leaf.shape, mesh, fsdp=fsdp, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, cfg) -> Any:
+    specs = _leaf_specs(params, mesh, cfg.fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def opt_shardings(params: Any, mesh: Mesh, cfg) -> Any:
+    """m/v shardings: follow params; ZeRO-1 additionally shards the leading
+    (stacked-layer) axis over ``data`` when the param itself is not
+    data-sharded — optimizer state is elementwise, so any extra axis works."""
+    specs = _leaf_specs(params, mesh, cfg.fsdp)
+
+    def zero1(path, spec, leaf):
+        if cfg.fsdp or not cfg.zero1:
+            return spec
+        parts = list(spec)
+        if "data" in parts:
+            return spec
+        if leaf.ndim >= 1 and parts and parts[0] is None:
+            if leaf.shape[0] % mesh.shape["data"] == 0:
+                parts[0] = "data"
+                return P(*parts)
+        return spec
+
+    z = jax.tree_util.tree_map_with_path(zero1, specs, params)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), z)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard the batch dim over (pod, data) when divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    lead = axes if axes and global_batch % total == 0 else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_entry_spec(name: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Decode-cache sharding.  Batch over (pod, data) when divisible; else
+    sequence-parallel: shard the sequence dim over data (long_500k, B=1)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    # shapes (after the stacked [repeat] axis): k/v [B,Hkv,S,hd],
+    # c_kv [B,S,rk], k_rope [B,S,rd], conv [B,dk,C], ssm [B,H,n,p]
+    core = shape[1:]
+    b = core[0]
+    parts: list = [None] * len(core)
+    if b % total == 0 and total > 1:
+        parts[0] = axes
+    else:
+        if name in ("k", "v") and len(core) == 4:
+            if core[2] % mesh.shape["data"] == 0:
+                parts[2] = "data"
+            if core[1] % mesh.shape["model"] == 0:
+                parts[1] = "model"
+        elif name in ("c_kv", "k_rope") and len(core) == 3:
+            if core[1] % mesh.shape["data"] == 0:
+                parts[1] = "data"
+        elif name == "ssm" and len(core) == 4:
+            if core[1] % mesh.shape["data"] == 0:
+                parts[1] = "data"
+        elif name == "conv" and len(core) == 3:
+            if core[2] % mesh.shape["model"] == 0:
+                parts[2] = "model"
+    # model-axis sharding of kv heads for batch-sharded attention caches
+    if parts[0] is not None and name in ("k", "v") and len(core) == 4:
+        if core[1] % mesh.shape["model"] == 0:
+            parts[1] = "model"
+    return P(None, *parts)  # leading stacked [repeat] axis replicated
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    def rule(path, leaf):
+        keys = [_key_str(k) for k in path]
+        return NamedSharding(mesh, cache_entry_spec(keys[-1], leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)

@@ -1,0 +1,156 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+Shardings are attached directly to the ShapeDtypeStructs (weak-type-correct,
+shardable, zero allocation).  Frontend stubs per assignment: whisper gets
+precomputed frame embeddings, llama-vision gets patch embeddings."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model
+from ..models.config import ModelConfig, SHAPES
+from ..optim.adamw import AdamW
+from . import sharding as shr
+from .train import TrainState, make_train_step
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    shapes = jax.eval_shape(lambda k: model.init_params(cfg, k), jax.random.PRNGKey(0))
+    return _with_shardings(shapes, shr.param_shardings(shapes, mesh, cfg))
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, opt: AdamW):
+    params = param_specs(cfg, mesh)
+    opt_shapes = jax.eval_shape(opt.init, params)
+    mu = _with_shardings(opt_shapes.mu, shr.opt_shardings(params, mesh, cfg))
+    nu = _with_shardings(opt_shapes.nu, shr.opt_shardings(params, mesh, cfg))
+    step_sh = NamedSharding(mesh, P())
+    from ..optim.adamw import AdamState
+
+    opt_state = AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=step_sh),
+        mu=mu, nu=nu,
+    )
+    return TrainState(
+        params=params,
+        opt_state=opt_state,
+        step=jax.ShapeDtypeStruct((), jnp.int32, sharding=step_sh),
+    )
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq_len: int):
+    bspec2 = shr.batch_spec(mesh, global_batch, 2)
+    bspec3 = shr.batch_spec(mesh, global_batch, 3)
+    batch = {
+        "tokens": _sds((global_batch, seq_len), jnp.int32, mesh, bspec2),
+        "labels": _sds((global_batch, seq_len), jnp.int32, mesh, bspec2),
+    }
+    if cfg.n_enc_layers:
+        batch["enc_input"] = _sds(
+            (global_batch, cfg.enc_seq, cfg.d_model), jnp.float32, mesh, bspec3
+        )
+    if cfg.n_vis_tokens:
+        batch["vis_input"] = _sds(
+            (global_batch, cfg.n_vis_tokens, cfg.d_model), jnp.float32, mesh, bspec3
+        )
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    shapes = jax.eval_shape(
+        functools.partial(model.init_cache, cfg, batch, max_len)
+    )
+    return _with_shardings(shapes, shr.cache_shardings(shapes, mesh))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh):
+    """Returns (fn, args_specs) for one dry-run cell."""
+    info = SHAPES[shape_name]
+    gb, sl = info["global_batch"], info["seq_len"]
+    kind = info["kind"]
+
+    if kind == "train":
+        opt = AdamW(lr=1e-4, weight_decay=0.01, grad_clip=1.0)
+        fn = make_train_step(cfg, opt)
+        args = (state_specs(cfg, mesh, opt), batch_specs(cfg, mesh, gb, sl))
+        return fn, args
+
+    if kind == "prefill":
+        def fn(params, batch):
+            return model.prefill(
+                params, cfg, batch["tokens"], max_len=sl,
+                enc_input=batch.get("enc_input"), vis_input=batch.get("vis_input"),
+            )
+
+        batch = batch_specs(cfg, mesh, gb, sl)
+        batch.pop("labels")
+        return fn, (param_specs(cfg, mesh), batch)
+
+    if kind == "decode":
+        def fn(params, cache, token, pos):
+            return model.decode_step(params, cache, cfg, token, pos)
+
+        bspec = shr.batch_spec(mesh, gb, 2)
+        args = (
+            param_specs(cfg, mesh),
+            cache_specs(cfg, mesh, gb, sl),
+            _sds((gb, 1), jnp.int32, mesh, bspec),
+            jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+        )
+        return fn, args
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# GRF-GP cell: the paper's own technique on the production mesh.
+# ---------------------------------------------------------------------------
+
+def build_gp_cell(mesh: Mesh, n_nodes: int = 1 << 20, n_walkers: int = 100,
+                  l_max: int = 3, cg_iters: int = 64, compress: bool = False,
+                  compact: bool = False):
+    """Distributed CG solve of (K̂+σ²I)v = b with row-sharded GRF features
+    (Lemma 1 on 1M nodes).  Rows over (pod, data); columns dense.
+
+    ``compact`` stores the trace payload as (int32 cols, bf16 loads, int8
+    lens) — 7 B/slot instead of 12 (§Perf: the matvec is HBM-bound, so the
+    payload stream IS the bottleneck; MC noise ≫ bf16 rounding)."""
+    from ..core.walks import WalkTrace
+    from ..distributed.gp_shard import sharded_cg_solve
+
+    k = n_walkers * (l_max + 1)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    row = P(axes)
+    load_dt = jnp.bfloat16 if compact else jnp.float32
+    len_dt = jnp.int8 if compact else jnp.int32
+    trace = WalkTrace(
+        cols=_sds((n_nodes, k), jnp.int32, mesh, P(axes, None)),
+        loads=_sds((n_nodes, k), load_dt, mesh, P(axes, None)),
+        lens=_sds((n_nodes, k), len_dt, mesh, P(axes, None)),
+    )
+    f = _sds((l_max + 1,), jnp.float32, mesh, P())
+    b = _sds((n_nodes,), jnp.float32, mesh, row)
+
+    def fn(trace, f, b):
+        return sharded_cg_solve(
+            trace, f, b, mesh, sigma_n2=0.1, max_iters=cg_iters,
+            fixed_unrolled=True, compress=compress,
+        )
+
+    return fn, (trace, f, b)

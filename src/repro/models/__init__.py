@@ -1,0 +1,3 @@
+from . import attention, config, layers, mla, model, moe, ssm  # noqa: F401
+from .config import LayerSpec, ModelConfig, SHAPES  # noqa: F401
+from .model import decode_step, forward, init_cache, init_params, loss_fn, prefill  # noqa: F401

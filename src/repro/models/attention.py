@@ -1,0 +1,224 @@
+"""GQA attention with sliding-window / softcap / cross-attention + KV caches.
+
+Train/prefill attention can route through the Pallas flash kernel
+(cfg.use_pallas_attn); decode stays on the XLA path (memory-bound).
+Sliding-window layers use *ring-buffer* KV caches of size ``window`` — this
+is what makes `long_500k` decode O(window) memory for the SWA architectures
+(DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import ops as flash_ops
+from ..launch.sharding import constrain, get_activation_mesh
+from .config import LayerSpec, ModelConfig
+from .layers import KeyGen, dense_init, rms_norm, rope
+
+
+def init_attn(kg: KeyGen, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "wq": dense_init(kg(), (d, h, hd)),
+        "wk": dense_init(kg(), (d, hkv, hd)),
+        "wv": dense_init(kg(), (d, hkv, hd)),
+        "wo": dense_init(kg(), (h, hd, d), scale=(h * hd) ** -0.5),
+    }
+
+
+def _project_qkv(p, xn, cfg, positions=None, kv_source=None):
+    """Returns q [B,H,S,hd], k/v [B,Hkv,Skv,hd] (roped when positions given)."""
+    dt = xn.dtype
+    src = xn if kv_source is None else kv_source.astype(dt)
+    q = jnp.einsum("bsd,dhk->bhsk", xn, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bhsk", src, p["wv"].astype(dt))
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _constrain_qkv(q, k, v):
+    """§Perf activation sharding for full-sequence attention.
+
+    Head-parallel (Megatron) when the query heads divide the model axis —
+    attention is then embarrassingly parallel per head; otherwise
+    sequence-parallel: shard the QUERY sequence over model and replicate
+    K/V (one all-gather per layer instead of XLA's involuntary reshards)."""
+    mesh = get_activation_mesh()
+    n_model = mesh.shape.get("model", 1) if mesh is not None else 1
+    h, hkv = q.shape[1], k.shape[1]
+    if n_model > 1 and h % n_model == 0:
+        kv_ax = "model" if hkv % n_model == 0 else None
+        q = constrain(q, "batch", "model", None, None)
+        k = constrain(k, "batch", kv_ax, None, None)
+        v = constrain(v, "batch", kv_ax, None, None)
+        return q, k, v, ("batch", "model", None, None)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    return q, k, v, ("batch", None, "model", None)
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,                     # [B, S, D]
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    positions: jax.Array,             # [S]
+    enc_out: jax.Array | None = None, # cross-attention memory [B, S_enc, D]
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    xn = rms_norm(x, p["norm"])
+    cross = spec.kind == "cross_attn"
+    q, k, v = _project_qkv(
+        p, xn, cfg,
+        positions=None if cross else positions,
+        kv_source=enc_out if cross else None,
+    )
+    if cfg.sp_attn:
+        q, k, v, o_spec = _constrain_qkv(q, k, v)
+    o = flash_ops.attention(
+        q, k, v,
+        causal=spec.causal and not cross,
+        window=spec.window,
+        softcap=cfg.attn_logit_softcap,
+        use_pallas=cfg.use_pallas_attn,
+        impl="pallas" if cfg.use_pallas_attn else cfg.attn_impl,
+        block_k=cfg.attn_block_k,
+    )
+    if cfg.sp_attn:
+        o = constrain(o, *o_spec)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# KV caches.
+# ---------------------------------------------------------------------------
+
+def attn_cache_shape(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int):
+    """Cache entry {k, v}: ring buffer of ``window`` for SWA layers."""
+    if spec.kind == "cross_attn":
+        s = cfg.enc_seq or cfg.n_vis_tokens
+    elif spec.window is not None:
+        s = min(spec.window, max_len)
+    else:
+        s = max_len
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.n_kv_heads, s, hd)
+    return {"k": shape, "v": shape}
+
+
+def attn_init_cache(cfg, spec, batch, max_len):
+    shapes = attn_cache_shape(cfg, spec, batch, max_len)
+    return {n: jnp.zeros(s, cfg.cache_dtype) for n, s in shapes.items()}
+
+
+def attn_prefill(
+    p, x, cfg, spec, positions, max_len, enc_out=None
+) -> tuple[jax.Array, dict]:
+    """Forward + produce the decode cache (window layers keep the tail)."""
+    xn = rms_norm(x, p["norm"])
+    cross = spec.kind == "cross_attn"
+    q, k, v = _project_qkv(
+        p, xn, cfg,
+        positions=None if cross else positions,
+        kv_source=enc_out if cross else None,
+    )
+    if cfg.sp_attn:
+        q, k, v, o_spec = _constrain_qkv(q, k, v)
+    o = flash_ops.attention(
+        q, k, v, causal=spec.causal and not cross, window=spec.window,
+        softcap=cfg.attn_logit_softcap, use_pallas=cfg.use_pallas_attn,
+        impl="pallas" if cfg.use_pallas_attn else cfg.attn_impl,
+        block_k=cfg.attn_block_k,
+    )
+    if cfg.sp_attn:
+        o = constrain(o, *o_spec)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+    if cross:
+        cache = {"k": k.astype(cfg.cache_dtype), "v": v.astype(cfg.cache_dtype)}
+    elif spec.window is not None:
+        w = min(spec.window, max_len)
+        # Ring buffer: position s lives at slot s % w; for a prefill of
+        # length S the live entries are the last min(w, S) positions.
+        s_len = x.shape[1]
+        t = min(w, s_len)
+        tail_k = k[:, :, -t:, :]
+        tail_v = v[:, :, -t:, :]
+        start = s_len - t
+        slots = (start + jnp.arange(t)) % w
+        b, hkv, _, hd = k.shape
+        zeros = jnp.zeros((b, hkv, w, hd), cfg.cache_dtype)
+        cache = {
+            "k": zeros.at[:, :, slots, :].set(tail_k.astype(cfg.cache_dtype)),
+            "v": zeros.at[:, :, slots, :].set(tail_v.astype(cfg.cache_dtype)),
+        }
+    else:
+        pad = max_len - k.shape[2]
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.cache_dtype),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.cache_dtype),
+        }
+    return x + out, cache
+
+
+def attn_decode(
+    p, x, cache, cfg, spec, pos,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: [B, 1, D]; pos: scalar int32 (next position)."""
+    xn = rms_norm(x, p["norm"])
+    cross = spec.kind == "cross_attn"
+    dt = xn.dtype
+
+    if cross:
+        q = jnp.einsum("bsd,dhk->bhsk", xn, p["wq"].astype(dt))
+        k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+        o = flash_ops.attention(q, k, v, causal=False, use_pallas=False)
+        out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))
+        return x + out, cache
+
+    q = jnp.einsum("bsd,dhk->bhsk", xn, p["wq"].astype(dt))
+    k_new = jnp.einsum("bsd,dhk->bhsk", xn, p["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dhk->bhsk", xn, p["wv"].astype(dt))
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+
+    s_cache = cache["k"].shape[2]
+    slot = pos % s_cache if spec.window is not None else pos
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2
+    )
+
+    idx = jnp.arange(s_cache)
+    if spec.window is not None:
+        # Ring buffer: slot s holds absolute position p ≡ s (mod w), the
+        # largest such p ≤ pos.  All slots ≤ pos are valid.
+        abs_pos = pos - ((pos - idx) % s_cache)
+        valid = abs_pos >= 0
+    else:
+        valid = idx <= pos
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    b, h, _, hd = q.shape
+    hkv = kf.shape[1]
+    g = h // hkv
+    qf = qf.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgk,bhsk->bhgs", qf, kf) / jnp.sqrt(hd)
+    if cfg.attn_logit_softcap is not None:
+        s = cfg.attn_logit_softcap * jnp.tanh(s / cfg.attn_logit_softcap)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsk->bhgk", w, vf).reshape(b, h, 1, hd).astype(dt)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))
+    return x + out, {"k": k, "v": v}

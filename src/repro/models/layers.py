@@ -1,0 +1,57 @@
+"""Shared building blocks: norms, rotary embeddings, gated MLP, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.  x: [..., S, D_even]; positions: [S] or [B,S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    # broadcast angles to x's rank: x [..., S, D], angles [S, half] or [B, S, half]
+    while angles.ndim < x.ndim:
+        angles = angles[None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """Gated MLP: down( silu(x·gate) ⊙ (x·up) ).  Weights in storage dtype."""
+    h = jax.nn.silu(x @ w_gate.astype(x.dtype)) * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape, scale: float | None = None) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in**-0.5
+    return scale * jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> jax.Array:
+    # 1/√d so that embed·√d (the lookup scaling) has unit variance and the
+    # tied unembedding produces O(1) logits at init.
+    return d**-0.5 * jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+
+
+class KeyGen:
+    """Deterministic PRNG key dispenser for parameter init."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)

@@ -1,0 +1,172 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed into a rank-``kv_lora_rank`` latent c_kv plus one shared
+RoPE key per position — the decode cache is O(S·(512+64)) instead of
+O(S·H·2·128): a 64× compression at 128 heads.
+
+Two decode paths:
+  * naive  — up-project the whole cached latent to per-head K/V each step
+             (the faithful formulation; our dry-run baseline);
+  * absorb — fold W_uk into the query and W_uv after the weights, so
+             attention runs *in the latent space*: per-token FLOPs drop from
+             O(S·H·(2·hd)·r) to O(S·H·(r+rd)).  This is the beyond-paper
+             §Perf optimisation for the deepseek decode cells (cfg.mla_absorb).
+
+Train path uses jnp attention (K head-dim 192 ≠ V head-dim 128 rules out the
+shared flash kernel; noted in DESIGN.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..launch.sharding import constrain
+from .config import ModelConfig
+from .layers import KeyGen, dense_init, rms_norm, rope
+
+
+def init_mla(kg: KeyGen, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = cfg.resolved_head_dim
+    rk, rq, rd = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "wq_a": dense_init(kg(), (d, rq)),
+        "q_norm": jnp.zeros((rq,), jnp.float32),
+        "wq_b": dense_init(kg(), (rq, h, hd + rd)),
+        "wkv_a": dense_init(kg(), (d, rk + rd)),
+        "kv_norm": jnp.zeros((rk,), jnp.float32),
+        "wk_b": dense_init(kg(), (rk, h, hd)),
+        "wv_b": dense_init(kg(), (rk, h, hd)),
+        "wo": dense_init(kg(), (h, hd, d), scale=(h * hd) ** -0.5),
+    }
+
+
+def _queries(p, xn, positions, cfg):
+    """q_nope [B,H,S,hd], q_rope [B,H,S,rd]."""
+    hd, rd = cfg.resolved_head_dim, cfg.rope_head_dim
+    dt = xn.dtype
+    qa = rms_norm(xn @ p["wq_a"].astype(dt), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bhsk", qa, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, xn, positions, cfg):
+    """c_kv [B,S,rk] (normed), k_rope [B,S,rd] (roped, shared across heads)."""
+    rk = cfg.kv_lora_rank
+    dt = xn.dtype
+    kv = xn @ p["wkv_a"].astype(dt)
+    c_kv = rms_norm(kv[..., :rk], p["kv_norm"])
+    k_rope = rope(kv[..., rk:], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Full-sequence MLA (train / prefill). x: [B,S,D]."""
+    hd, rd = cfg.resolved_head_dim, cfg.rope_head_dim
+    xn = rms_norm(x, p["norm"])
+    dt = xn.dtype
+    q_nope, q_rope = _queries(p, xn, positions, cfg)
+    c_kv, k_rope = _latents(p, xn, positions, cfg)
+
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, p["wv_b"].astype(dt))
+
+    if cfg.sp_attn:
+        # Megatron-style head parallelism (§Perf): without these constraints
+        # SPMD replicates the whole MLA block across the model axis.
+        q_nope = constrain(q_nope, "batch", "model", None, None)
+        q_rope = constrain(q_rope, "batch", "model", None, None)
+        k_nope = constrain(k_nope, "batch", "model", None, None)
+        v = constrain(v, "batch", "model", None, None)
+        c_kv = constrain(c_kv, "batch", None, None)
+        k_rope = constrain(k_rope, "batch", None, None)
+
+    scale = 1.0 / jnp.sqrt(hd + rd)
+    s = (
+        jnp.einsum("bhqk,bhsk->bhqs", q_nope, k_nope)
+        + jnp.einsum("bhqk,bsk->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    sq = x.shape[1]
+    causal = jnp.arange(sq)[:, None] >= jnp.arange(sq)[None, :]
+    s = jnp.where(causal[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhqs,bhsk->bhqk", w, v)
+    if cfg.sp_attn:
+        o = constrain(o, "batch", "model", None, None)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))
+    return x + out
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return {
+        "c_kv": (batch, max_len, cfg.kv_lora_rank),
+        "k_rope": (batch, max_len, cfg.rope_head_dim),
+    }
+
+
+def mla_init_cache(cfg, batch, max_len):
+    return {n: jnp.zeros(s, cfg.cache_dtype) for n, s in mla_cache_shape(cfg, batch, max_len).items()}
+
+
+def mla_prefill(p, x, cfg, positions, max_len):
+    out = mla_forward(p, x, cfg, positions)
+    xn = rms_norm(x, p["norm"])
+    c_kv, k_rope = _latents(p, xn, positions, cfg)
+    pad = max_len - x.shape[1]
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).astype(cfg.cache_dtype),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(cfg.cache_dtype),
+    }
+    return out, cache
+
+
+def mla_decode(p, x, cache, cfg, pos):
+    """Single-token decode; naive or absorbed per cfg.mla_absorb."""
+    hd, rd = cfg.resolved_head_dim, cfg.rope_head_dim
+    xn = rms_norm(x, p["norm"])
+    dt = xn.dtype
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _queries(p, xn, posv, cfg)       # [B,H,1,·]
+    c_new, kr_new = _latents(p, xn, posv, cfg)        # [B,1,·]
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1
+    )
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1
+    )
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    s_max = c_kv.shape[1]
+    valid = jnp.arange(s_max) <= pos
+    scale = 1.0 / jnp.sqrt(hd + rd)
+    ckv = c_kv.astype(dt)
+    krope = k_rope.astype(dt)
+
+    if cfg.mla_absorb:
+        # Absorbed: score in latent space; W_uk folded into q, W_uv applied
+        # to the attention-weighted latent.
+        q_lat = jnp.einsum("bhqk,rhk->bhqr", q_nope, p["wk_b"].astype(dt))
+        s = (
+            jnp.einsum("bhqr,bsr->bhqs", q_lat, ckv)
+            + jnp.einsum("bhqk,bsk->bhqs", q_rope, krope)
+        ).astype(jnp.float32) * scale
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhqs,bsr->bhqr", w, ckv)
+        o = jnp.einsum("bhqr,rhk->bhqk", o_lat, p["wv_b"].astype(dt))
+    else:
+        # Naive: up-project the entire cached latent every step.
+        k_nope = jnp.einsum("bsr,rhk->bhsk", ckv, p["wk_b"].astype(dt))
+        v = jnp.einsum("bsr,rhk->bhsk", ckv, p["wv_b"].astype(dt))
+        s = (
+            jnp.einsum("bhqk,bhsk->bhqs", q_nope, k_nope)
+            + jnp.einsum("bhqk,bsk->bhqs", q_rope, krope)
+        ).astype(jnp.float32) * scale
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(dt)
+        o = jnp.einsum("bhqs,bhsk->bhqk", w, v)
+
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(dt))
+    return x + out, new_cache

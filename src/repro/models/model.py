@@ -1,0 +1,394 @@
+"""Unified model: stage-structured transformer/SSM/hybrid/enc-dec zoo.
+
+Parameters mirror the config's stage structure: ``params['stages'][si]`` is a
+pytree whose leaves carry a leading ``[repeat]`` axis, consumed by
+``lax.scan`` — compiled HLO is O(pattern size), not O(n_layers), for every
+architecture (DESIGN.md §4).  Shared blocks (zamba2) are stored once and
+closed over inside the scan.
+
+Public entry points:
+  init_params(cfg, key)                    — real init (smoke tests) or under
+                                             jax.eval_shape (dry-run, no alloc)
+  forward(params, cfg, tokens, ...)        — logits + aux losses
+  init_cache / prefill / decode            — serving path with KV/SSM caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mla, moe, ssm
+from .config import LayerSpec, ModelConfig
+from .layers import KeyGen, dense_init, embed_init, rms_norm, swiglu
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def _init_mlp(kg: KeyGen, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "gate": dense_init(kg(), (d, f)),
+        "up": dense_init(kg(), (d, f)),
+        "down": dense_init(kg(), (f, d), scale=f**-0.5),
+    }
+
+
+def _init_layer(kg: KeyGen, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    p: dict = {}
+    if spec.kind in ("attn", "cross_attn"):
+        p["attn"] = attention.init_attn(kg, cfg)
+    elif spec.kind == "mla":
+        p["mla"] = mla.init_mla(kg, cfg)
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm.init_mamba(kg, cfg)
+    elif spec.kind == "shared_attn":
+        pass  # parameters live in params['shared'] (applied via closure)
+    if spec.has_mlp and spec.kind not in ("mamba", "shared_attn"):
+        p["moe" if spec.moe else "mlp"] = (
+            moe.init_moe(kg, cfg) if spec.moe else _init_mlp(kg, cfg)
+        )
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    kg = KeyGen(key)
+    params: dict = {"embed": embed_init(kg(), cfg.vocab_size, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(kg(), cfg.vocab_size, cfg.d_model)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+
+    stages = []
+    for repeat, pattern in cfg.stages:
+        reps = []
+        for _ in range(repeat):
+            reps.append(
+                {f"L{pi}": _init_layer(kg, cfg, spec) for pi, spec in enumerate(pattern)}
+            )
+        stages.append(_stack(reps))
+    params["stages"] = stages
+
+    if any(s.kind == "shared_attn" for _, p in cfg.stages for s in p):
+        params["shared"] = {
+            "attn": attention.init_attn(kg, cfg),
+            "mlp": _init_mlp(kg, cfg),
+        }
+    if cfg.n_enc_layers:
+        enc_spec = LayerSpec(kind="attn", causal=False)
+        mult = cfg.enc_pattern_mult
+        params["encoder"] = {
+            "stages": [
+                _stack(
+                    [
+                        {f"L{pi}": _init_layer(kg, cfg, enc_spec) for pi in range(mult)}
+                        for _ in range(cfg.n_enc_layers)
+                    ]
+                )
+            ],
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / scoring).
+# ---------------------------------------------------------------------------
+
+def _mlp_forward(p: dict, x: jax.Array) -> jax.Array:
+    xn = rms_norm(x, p["norm"])
+    return x + swiglu(xn, p["gate"], p["up"], p["down"])
+
+
+def _apply_layer(
+    spec: LayerSpec, p: dict, x, cfg, positions, shared, enc_out
+):
+    """One layer forward; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "attn":
+        x = attention.attn_forward(p["attn"], x, cfg, spec, positions)
+    elif spec.kind == "cross_attn":
+        x = attention.attn_forward(p["attn"], x, cfg, spec, positions, enc_out=enc_out)
+    elif spec.kind == "mla":
+        x = mla.mla_forward(p["mla"], x, cfg, positions)
+    elif spec.kind == "mamba":
+        x = ssm.mamba_forward(p["mamba"], x, cfg)
+        return x, aux
+    elif spec.kind == "shared_attn":
+        x = attention.attn_forward(shared["attn"], x, cfg, spec, positions)
+        x = _mlp_forward(shared["mlp"], x)
+        return x, aux
+    if spec.has_mlp:
+        if spec.moe:
+            x, aux = moe.moe_forward(p["moe"], x, cfg)
+        else:
+            x = _mlp_forward(p["mlp"], x)
+    return x, aux
+
+
+def _unroll(cfg: ModelConfig, stage_params) -> int:
+    # Layer scans stay rolled even for the dry-run: per-stage costs are
+    # recovered by the pattern-doubling probes in launch/dryrun.py
+    # (cfg.scan_unroll instead unrolls *inner* scans — SSD chunks, CG).
+    del cfg, stage_params
+    return 1
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def _stage_forward(stage_params, pattern, x, cfg, positions, shared, enc_out):
+    def body(carry, rep_params):
+        h, aux = carry
+        for pi, spec in enumerate(pattern):
+            h, a = _apply_layer(
+                spec, rep_params[f"L{pi}"], h, cfg, positions, shared, enc_out
+            )
+            aux = aux + a
+        return (h, aux), None
+
+    body = _remat_wrap(body, cfg)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), stage_params,
+        unroll=_unroll(cfg, stage_params),
+    )
+    return x, aux
+
+
+def _encode(params, cfg, enc_input):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = enc_input.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    spec = LayerSpec(kind="attn", causal=False)
+    x, _ = _stage_forward(
+        params["encoder"]["stages"][0], (spec,) * cfg.enc_pattern_mult,
+        x, cfg, positions, None, None,
+    )
+    return rms_norm(x, params["encoder"]["final_norm"])
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # [B, S]
+    enc_input: jax.Array | None = None, # [B, enc_seq, D] (whisper stub)
+    vis_input: jax.Array | None = None, # [B, n_vis, D]  (vision stub)
+    positions: jax.Array | None = None,
+):
+    """Returns (logits [B,S,V] f32, aux moe loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
+
+    enc_out = None
+    if cfg.n_enc_layers and enc_input is not None:
+        enc_out = _encode(params, cfg, enc_input)
+    if cfg.n_vis_tokens and vis_input is not None:
+        enc_out = vis_input.astype(cfg.dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    for si, (repeat, pattern) in enumerate(cfg.stages):
+        x, a = _stage_forward(
+            params["stages"][si], pattern, x, cfg, positions,
+            params.get("shared"), enc_out,
+        )
+        aux = aux + a
+
+    x = rms_norm(x, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch) -> tuple[jax.Array, dict]:
+    """Next-token CE + z-loss + MoE load-balancing aux."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        enc_input=batch.get("enc_input"), vis_input=batch.get("vis_input"),
+    )
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    logp = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    ce = -jnp.mean(logp)
+    zloss = 1e-4 * jnp.mean(logz**2)
+    total = ce + zloss + 0.01 * aux
+    return total, {"ce": ce, "zloss": zloss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode.
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg, spec, batch, max_len):
+    if spec.kind in ("attn", "cross_attn", "shared_attn"):
+        return attention.attn_init_cache(cfg, spec, batch, max_len)
+    if spec.kind == "mla":
+        return mla.mla_init_cache(cfg, batch, max_len)
+    if spec.kind == "mamba":
+        return ssm.mamba_init_cache(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Zeroed decode cache mirroring the stage structure."""
+    stages = []
+    for repeat, pattern in cfg.stages:
+        reps = []
+        for _ in range(repeat):
+            reps.append(
+                {
+                    f"L{pi}": _layer_cache(cfg, spec, batch, max_len)
+                    for pi, spec in enumerate(pattern)
+                }
+            )
+        stages.append(_stack(reps))
+    return {"stages": stages}
+
+
+def _apply_layer_decode(spec, p, c, x, cfg, pos, shared):
+    if spec.kind == "attn":
+        x, c2 = attention.attn_decode(p["attn"], x, c, cfg, spec, pos)
+    elif spec.kind == "cross_attn":
+        x, c2 = attention.attn_decode(p["attn"], x, c, cfg, spec, pos)
+    elif spec.kind == "mla":
+        x, c2 = mla.mla_decode(p["mla"], x, c, cfg, pos)
+    elif spec.kind == "mamba":
+        x, c2 = ssm.mamba_decode(p["mamba"], x, c, cfg)
+        return x, c2
+    elif spec.kind == "shared_attn":
+        x, c2 = attention.attn_decode(shared["attn"], x, c, cfg, spec, pos)
+        x = _mlp_forward(shared["mlp"], x)
+        return x, c2
+    if spec.has_mlp:
+        if spec.moe:
+            x, _ = moe.moe_forward(p["moe"], x, cfg)
+        else:
+            x = _mlp_forward(p["mlp"], x)
+    return x, c2
+
+
+def decode_step(
+    params: dict,
+    cache: dict,
+    cfg: ModelConfig,
+    token: jax.Array,      # [B, 1]
+    pos: jax.Array,        # scalar int32: position being generated
+):
+    """One-token decode: returns (logits [B,1,V], new cache)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    shared = params.get("shared")
+
+    new_stages = []
+    for si, (repeat, pattern) in enumerate(cfg.stages):
+        def body(h, inp, pattern=pattern):
+            rep_params, rep_cache = inp
+            new_rep_cache = {}
+            for pi, spec in enumerate(pattern):
+                h, c2 = _apply_layer_decode(
+                    spec, rep_params[f"L{pi}"], rep_cache[f"L{pi}"], h, cfg, pos, shared
+                )
+                new_rep_cache[f"L{pi}"] = c2
+            return h, new_rep_cache
+
+        x, new_cache_si = jax.lax.scan(
+            body, x, (params["stages"][si], cache["stages"][si]),
+            unroll=_unroll(cfg, params["stages"][si]),
+        )
+        new_stages.append(new_cache_si)
+
+    x = rms_norm(x, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    return logits, {"stages": new_stages}
+
+
+def _apply_layer_prefill(spec, p, x, cfg, positions, max_len, shared, enc_out):
+    if spec.kind in ("attn", "cross_attn"):
+        x, c = attention.attn_prefill(
+            p["attn"], x, cfg, spec, positions, max_len,
+            enc_out=enc_out if spec.kind == "cross_attn" else None,
+        )
+    elif spec.kind == "mla":
+        x, c = mla.mla_prefill(p["mla"], x, cfg, positions, max_len)
+    elif spec.kind == "mamba":
+        x, c = ssm.mamba_forward(p["mamba"], x, cfg, return_state=True)
+        return x, c
+    elif spec.kind == "shared_attn":
+        x, c = attention.attn_prefill(shared["attn"], x, cfg, spec, positions, max_len)
+        x = _mlp_forward(shared["mlp"], x)
+        return x, c
+    if spec.has_mlp:
+        if spec.moe:
+            x, _ = moe.moe_forward(p["moe"], x, cfg)
+        else:
+            x = _mlp_forward(p["mlp"], x)
+    return x, c
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                  # [B, S]
+    max_len: int,
+    enc_input: jax.Array | None = None,
+    vis_input: jax.Array | None = None,
+):
+    """Forward over a prompt, producing (last-token logits, decode cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    positions = jnp.arange(tokens.shape[1])
+    shared = params.get("shared")
+
+    enc_out = None
+    if cfg.n_enc_layers and enc_input is not None:
+        enc_out = _encode(params, cfg, enc_input)
+    if cfg.n_vis_tokens and vis_input is not None:
+        enc_out = vis_input.astype(cfg.dtype)
+
+    new_stages = []
+    for si, (repeat, pattern) in enumerate(cfg.stages):
+        def body(h, rep_params, pattern=pattern):
+            caches = {}
+            for pi, spec in enumerate(pattern):
+                h, c = _apply_layer_prefill(
+                    spec, rep_params[f"L{pi}"], h, cfg, positions, max_len,
+                    shared, enc_out,
+                )
+                caches[f"L{pi}"] = c
+            return h, caches
+
+        x, cache_si = jax.lax.scan(
+            body, x, params["stages"][si],
+            unroll=_unroll(cfg, params["stages"][si]),
+        )
+        new_stages.append(cache_si)
+
+    x = rms_norm(x, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum(
+        "bd,vd->bv", x[:, -1], unembed.astype(x.dtype)
+    ).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+    return logits, {"stages": new_stages}

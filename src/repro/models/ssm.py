@@ -1,0 +1,186 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060) — mamba2-2.7b and the zamba2-7b hybrid backbone.
+
+Train/prefill: lax.scan over sequence chunks; each chunk does an
+intra-chunk (quadratic within Q=ssm_chunk, MXU-friendly) pass plus an
+inter-chunk state recurrence.  Memory stays O(B·H·Q²) per step instead of
+O(B·H·S·Q) — the whole-sequence einsum formulation would blow HBM at 32k+.
+
+Decode: O(1) recurrent update of (conv_state, ssm_state) — this is why the
+SSM/hybrid archs run the `long_500k` cell (DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import KeyGen, dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.expand * cfg.d_model
+    nh = din // cfg.ssm_head_dim
+    return din, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(kg: KeyGen, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din, nh, hd, ds = _dims(cfg)
+    return {
+        "norm": jnp.zeros((d,), jnp.float32),
+        "in_proj": dense_init(kg(), (d, 2 * din + 2 * ds + nh)),
+        "conv_w": dense_init(kg(), (cfg.d_conv, din + 2 * ds), scale=0.5),
+        "conv_b": jnp.zeros((din + 2 * ds,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "out_norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": dense_init(kg(), (din, d), scale=din**-0.5),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    din, nh, hd, ds = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d over [B, S, C]; optional [B, d_conv-1, C] state."""
+    dk = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], dk - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype)
+        for i in range(dk)
+    )
+    new_state = xp[:, -(dk - 1) :, :]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def _ssd_chunk_scan(xh, dt, a, bmat, cmat, chunk, unroll=1):
+    """Chunked SSD.  xh:[B,S,H,P] dt:[B,S,H] a:[H] bmat/cmat:[B,S,N].
+
+    Returns y:[B,S,H,P] and final state [B,H,N,P]."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # dt=0 on padded steps ⇒ decay exp(0)=1 and zero input: the state
+        # recurrence is unaffected; padded outputs are sliced off below.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    c = s // q
+
+    # Reshape to chunks; run everything in f32 for the exp/cumsum stability.
+    xh = xh.reshape(b, c, q, h, p).astype(jnp.float32)
+    dt = dt.reshape(b, c, q, h).astype(jnp.float32)
+    bm = bmat.reshape(b, c, q, n).astype(jnp.float32)
+    cm = cmat.reshape(b, c, q, n).astype(jnp.float32)
+    da = dt * a  # [B,C,Q,H] (negative)
+
+    def step(state, inp):
+        xh_c, da_c, b_c, c_c, dtc = inp          # [B,Q,H,P], [B,Q,H], [B,Q,N]×2, [B,Q,H]
+        cum = jnp.cumsum(da_c, axis=1)           # [B,Q,H]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]   # [B,Q,Q,H] = cum_i - cum_j
+        iq = jnp.arange(q)
+        causal = iq[:, None] >= iq[None, :]
+        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        xdt = xh_c * dtc[..., None]              # [B,Q,H,P]
+        # intra-chunk: y_i = Σ_j (C_i·B_j) L_ij xdt_j
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)           # [B,Q,Q]
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, l_mat, xdt)
+        # inter-chunk: y_i += (C_i · S_prev) * exp(cum_i)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", c_c, state, jnp.exp(cum))
+        # state update: S = S*exp(total) + Σ_j B_j exp(total - cum_j) xdt_j
+        total = cum[:, -1:, :]                    # [B,1,H]
+        decay_j = jnp.exp(total - cum)            # [B,Q,H]
+        s_new = state * jnp.exp(total[:, 0, :])[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", b_c, decay_j, xdt
+        )
+        return s_new, y_intra + y_inter
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    inputs = (
+        xh.transpose(1, 0, 2, 3, 4),
+        da.transpose(1, 0, 2, 3),
+        bm.transpose(1, 0, 2, 3),
+        cm.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2, 3),
+    )
+    state, ys = jax.lax.scan(
+        step, state0, inputs, unroll=min(unroll, c)
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y[:, :s_orig], state
+
+
+def mamba_forward(p: dict, x: jax.Array, cfg: ModelConfig, return_state=False):
+    """Full-sequence Mamba2 block. x: [B, S, D]."""
+    din, nh, hd, ds = _dims(cfg)
+    xn = rms_norm(x, p["norm"])
+    dt_ = xn.dtype
+    zxbcdt = xn @ p["in_proj"].astype(dt_)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = jnp.split(xbc, [din, din + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                      # [H]
+    xh = xin.reshape(*xin.shape[:2], nh, hd)
+    y, state = _ssd_chunk_scan(
+        xh, dt, a, bmat, cmat, cfg.ssm_chunk, unroll=cfg.scan_unroll
+    )
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xin.shape).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = y @ p["out_proj"].astype(dt_)
+    if return_state:
+        return x + out, {"conv": conv_state.astype(jnp.float32), "ssm": state}
+    return x + out
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    din, nh, hd, ds = _dims(cfg)
+    return {
+        "conv": (batch, cfg.d_conv - 1, din + 2 * ds),
+        "ssm": (batch, nh, ds, hd),
+    }
+
+
+def mamba_init_cache(cfg, batch, dtype=jnp.float32):
+    return {n: jnp.zeros(s, dtype) for n, s in mamba_cache_shape(cfg, batch).items()}
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """Single-token recurrent update. x: [B, 1, D]."""
+    din, nh, hd, ds = _dims(cfg)
+    xn = rms_norm(x, p["norm"])
+    dt_ = xn.dtype
+    zxbcdt = xn @ p["in_proj"].astype(dt_)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xin, bmat, cmat = jnp.split(xbc, [din, din + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(x.shape[0], nh, hd).astype(jnp.float32)           # [B,H,P]
+    bm = bmat[:, 0].astype(jnp.float32)                                 # [B,N]
+    cm = cmat[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a)                                             # [B,H]
+    xdt = xh * dt[..., None]
+    s_new = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", bm, xdt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm, s_new) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, din).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"])
+    out = y @ p["out_proj"].astype(dt_)
+    return x + out, {"conv": conv_state.astype(jnp.float32), "ssm": s_new}

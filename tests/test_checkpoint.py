@@ -1,0 +1,76 @@
+"""Fault tolerance: atomic checkpoints, kill/resume bit-exactness, elastic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduce_config
+from repro.launch.train import train_loop
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12.0).reshape(3, 4),
+        "b": {"c": jnp.asarray([1, 2, 3], jnp.int32), "d": jnp.asarray(2.5)},
+    }
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(5, tree, extra={"note": "hi"})
+    restored, manifest = mgr.restore(tree)
+    assert manifest["step"] == 5 and manifest["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.asarray(float(s))})
+    assert mgr.steps() == [3, 4]
+
+
+def test_interrupted_save_invisible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.asarray(1.0)})
+    # simulate a crash mid-save: tmp dir without MANIFEST
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    os.makedirs(tmp_path / "step_0000000003")  # no manifest either
+    assert mgr.latest_step() == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, {"x": jnp.ones((256, 256))}, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_kill_and_resume_training_is_bit_exact(tmp_path):
+    """10 straight steps == 6 steps + simulated preemption + resume."""
+    cfg = reduce_config(get_config("h2o-danube-1.8b"))
+
+    straight, _ = train_loop(cfg, steps=10, ckpt_dir=None, global_batch=2,
+                             seq_len=16, seed=3)
+
+    d1 = str(tmp_path / "run")
+    train_loop(cfg, steps=6, ckpt_dir=d1, ckpt_every=3, global_batch=2,
+               seq_len=16, seed=3)
+    # 'preemption': a brand-new process would call train_loop again —
+    # it restores from step 6 and continues to 10.
+    resumed, _ = train_loop(cfg, steps=10, ckpt_dir=d1, ckpt_every=3,
+                            global_batch=2, seq_len=16, seed=3)
+
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(resumed.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_elastic_restore_shape_check(tmp_path):
+    """Restore validates shapes — a mismatched architecture is rejected."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((4, 4))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.ones((8, 8))})
+    with pytest.raises(KeyError):
+        mgr.restore({"v": jnp.ones((4, 4))})

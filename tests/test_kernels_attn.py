@@ -1,0 +1,57 @@
+"""Pallas flash attention kernel: sweep vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, mha_ref
+
+CASES = [
+    dict(b=2, h=4, hkv=4, sq=128, skv=128, d=32),
+    dict(b=1, h=8, hkv=2, sq=128, skv=128, d=32),               # GQA
+    dict(b=1, h=4, hkv=2, sq=96, skv=96, d=32),                 # padding
+    dict(b=1, h=2, hkv=2, sq=64, skv=64, d=32, causal=False),   # encoder
+    dict(b=1, h=4, hkv=4, sq=128, skv=128, d=32, window=48),    # SWA
+    dict(b=1, h=4, hkv=4, sq=128, skv=128, d=32, softcap=30.0), # gemma2
+    dict(b=1, h=4, hkv=2, sq=128, skv=256, d=32, causal=False), # cross-attn
+    dict(b=1, h=4, hkv=4, sq=128, skv=128, d=32, window=32, softcap=20.0),
+    dict(b=1, h=2, hkv=1, sq=40, skv=40, d=16),                 # tiny + GQA
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_matches_oracle(case):
+    case = dict(case)
+    b, h, hkv = case.pop("b"), case.pop("h"), case.pop("hkv")
+    sq, skv, d = case.pop("sq"), case.pop("skv"), case.pop("d")
+    rng = np.random.default_rng(b * 100 + h)
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    got = flash_attention(q, k, v, interpret=True, block_q=32, block_k=64, **case)
+    want = mha_ref(q, k, v, **case)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    got = flash_attention(q, k, v, interpret=True, block_q=32, block_k=32)
+    want = mha_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.array(got, np.float32), np.array(want, np.float32), rtol=0.05, atol=0.05
+    )
+
+
+def test_block_shape_invariance():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 160, 32)), jnp.float32)
+    outs = [
+        np.array(flash_attention(q, k, v, interpret=True, block_q=bq, block_k=bk))
+        for bq, bk in [(32, 32), (64, 128), (160, 160)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)

@@ -1,0 +1,36 @@
+"""Pallas rmsnorm kernel vs oracle: shape/dtype sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+CASES = [
+    (8, 64, "float32"),
+    (100, 256, "float32"),     # non-divisible rows (padding)
+    (33, 128, "bfloat16"),
+    (2 * 7 * 16, 96, "float32"),
+]
+
+
+@pytest.mark.parametrize("m,d,dtype", CASES)
+def test_matches_oracle(m, d, dtype):
+    rng = np.random.default_rng(m + d)
+    x = jnp.asarray(rng.standard_normal((m, d)), dtype)
+    scale = jnp.asarray(0.1 * rng.standard_normal(d), jnp.float32)
+    got = rmsnorm(x, scale, interpret=True, block_m=32)
+    want = rmsnorm_ref(x, scale)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_3d_input():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 17, 64)), jnp.float32)
+    scale = jnp.zeros(64, jnp.float32)
+    got = rmsnorm(x, scale, interpret=True)
+    want = rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

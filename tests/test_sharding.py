@@ -1,0 +1,73 @@
+"""Sharding rules: divisibility safety + small-mesh lowering of real cells.
+
+The 512-device production dry-run lives in launch/dryrun.py; here we prove
+the same machinery end-to-end on an 8-device mesh in a subprocess."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import batch_spec, param_spec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_param_spec_divisibility_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # 8 heads never divide model=16 → falls back to head_dim or replication
+    spec = param_spec("wq", (2560, 8, 320), mesh, fsdp=False, stacked=False)
+    assert spec[1] is None and spec[2] == "model"  # 320 % 16 == 0
+    spec = param_spec("wq", (2560, 8, 10), mesh, fsdp=False, stacked=False)
+    assert spec[1] is None and spec[2] is None
+    # stacked leaves get a leading None
+    spec = param_spec("gate", (24, 2560, 10240), mesh, fsdp=True, stacked=True)
+    assert spec == P(None, "data", "model")
+
+
+def test_batch_spec():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec(mesh, 256, 2) == P(("pod", "data"), None)
+    assert batch_spec(mesh, 1, 2) == P(None, None)   # indivisible → replicate
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_config, reduce_config
+from repro.launch import specs
+from repro.launch.hlo_analysis import summarize_compiled
+import dataclasses
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+for arch in ["h2o-danube-1.8b", "mamba2-2.7b", "whisper-base"]:
+    cfg = reduce_config(get_config(arch))
+    for shape in ["train_4k", "decode_32k"]:
+        # reduced shapes: patch the global SHAPES through build_cell inputs
+        from repro.models.config import SHAPES
+        SHAPES[shape] = dict(SHAPES[shape])
+        SHAPES[shape]["seq_len"] = 64
+        SHAPES[shape]["global_batch"] = 8
+        fn, args = specs.build_cell(cfg, shape, mesh)
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+            s = summarize_compiled(compiled)
+        assert s["roofline"]["flops_per_device"] > 0
+print("SHARDED_LOWERING_OK")
+"""
+
+
+def test_cells_lower_on_small_mesh():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "SHARDED_LOWERING_OK" in res.stdout, res.stdout[-2000:] + res.stderr[-3000:]
