@@ -1,0 +1,99 @@
+"""Backend microbenchmark for the GRF sparse product family (perf seed).
+
+Times ``phi_matvec`` / ``phi_t_matvec`` / ``khat_matvec`` across backends
+("xla", "pallas-interpret", plus "pallas" on real TPUs) and problem sizes
+N ∈ {1e3, 1e4, 1e5}, and writes the comparison to ``BENCH_spmv.json`` at
+the repo root — the longitudinal artifact for tracking hot-path speedups
+across PRs.
+
+Synthetic ELL payloads (uniform random cols, K = 64 slots/row) isolate the
+sparse products from walk sampling; this matches the memory-access pattern
+of a real trace with n_walkers·(l_max+1) = 64.
+
+Note: "pallas-interpret" runs the kernels through the Pallas *interpreter*
+— it validates kernel semantics on CPU but its timings are not Mosaic
+timings; treat them as correctness-path numbers.  On CPU hosts the fast
+mode also drops N=1e5 for the interpreter backend to keep runtime sane.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+
+K_SLOTS = 64
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_spmv.json")
+
+
+def _payload(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal((n, K_SLOTS)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, n, (n, K_SLOTS)), jnp.int32)
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    return vals, cols, v
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())  # compile / warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def _ops(vals, cols, v, n, backend):
+    return {
+        "phi_matvec": lambda: dispatch.phi_matvec(vals, cols, v, backend=backend),
+        "phi_t_matvec": lambda: dispatch.phi_t_matvec(
+            vals, cols, v, n, backend=backend
+        ),
+        "khat_matvec": lambda: dispatch.khat_matvec(
+            vals, cols, vals, cols, v, n, backend=backend
+        ),
+    }
+
+
+def run(fast: bool = True):
+    sizes = [1_000, 10_000, 100_000]
+    backends = ["xla", "pallas-interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+
+    rows, table = [], {}
+    for n in sizes:
+        vals, cols, v = _payload(n)
+        for backend in backends:
+            if (
+                fast
+                and backend == "pallas-interpret"
+                and n > 10_000
+                and jax.default_backend() != "tpu"
+            ):
+                continue  # interpreter at 1e5 rows is minutes on CPU
+            reps = 3 if (backend == "pallas-interpret" or n >= 100_000) else 10
+            for op_name, fn in _ops(vals, cols, v, n, backend).items():
+                us = _time(fn, reps)
+                table[f"{op_name}/N{n}/{backend}"] = us
+                rows.append(dict(
+                    name=f"spmv_{op_name}_N{n}_{backend}",
+                    us_per_call=f"{us:.1f}",
+                    N=n, K=K_SLOTS, op=op_name, backend=backend,
+                ))
+
+    artifact = {
+        "host_backend": jax.default_backend(),
+        "k_slots": K_SLOTS,
+        "unit": "us_per_call",
+        "results": table,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+    rows.append(dict(name="spmv_artifact", path=os.path.abspath(OUT_PATH)))
+    return rows

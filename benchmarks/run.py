@@ -2,7 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the
 wall-time of the benchmark unit where meaningful (scaling rows) and blank
-for quality metrics; ``derived`` carries the metric payload."""
+for quality metrics; ``derived`` carries the metric payload.
+
+Flags:
+  --full             larger problem sizes (CI uses the fast defaults)
+  --backend=NAME     route every GRF sparse product through the given
+                     backend ("xla" | "pallas" | "pallas-interpret") via
+                     repro.kernels.dispatch — the whole GP stack obeys it.
+  --only=PREFIX      run only suites whose label starts with PREFIX
+"""
 from __future__ import annotations
 
 import json
@@ -18,17 +26,34 @@ def _emit(rows):
 
 
 def main() -> None:
-    fast = "--full" not in sys.argv
+    argv = sys.argv[1:]
+    fast = "--full" not in argv
+    backend = None
+    only = None
+    for arg in argv:
+        if arg.startswith("--backend="):
+            backend = arg.split("=", 1)[1]
+        if arg.startswith("--only="):
+            only = arg.split("=", 1)[1]
+
+    if backend is not None:
+        from repro.kernels import dispatch
+
+        dispatch.set_backend(backend)
+        print(f"# spmv backend: {backend}", flush=True)
+
     from benchmarks import (
         bench_ablation,
         bench_bo,
         bench_classification,
         bench_regression,
         bench_scaling,
+        bench_spmv,
         roofline,
     )
 
     suites = [
+        ("spmv (backend registry / BENCH_spmv.json)", bench_spmv),
         ("scaling (Table 1 / Fig 2)", bench_scaling),
         ("ablation (Table 5)", bench_ablation),
         ("regression (Fig 3)", bench_regression),
@@ -37,6 +62,8 @@ def main() -> None:
         ("roofline (§Roofline)", roofline),
     ]
     for label, mod in suites:
+        if only is not None and not label.startswith(only):
+            continue
         t0 = time.time()
         try:
             rows = mod.run(fast=fast)

@@ -5,9 +5,12 @@ started), draw one pathwise-conditioned posterior sample over all N nodes
 (Eq. 12 — O(N^{3/2})), query the argmax among unobserved nodes.
 
 Static shapes: observations live in a preallocated [n_init + n_steps] buffer
-with an ``obs_mask``; padded slots carry ~infinite noise.  Every jitted
-function therefore compiles exactly once per BO run (TPU-friendly — no
-retracing as the dataset grows).
+with an ``obs_mask``; padded slots carry ~infinite noise — the per-row
+noise-vector form of :class:`repro.core.linops.ShiftedOperator`, which both
+the refit (gp/mll.py) and the pathwise sampler (gp/posterior.py) assemble
+internally, so the whole BO loop runs on the backend-dispatched operator
+layer.  Every jitted function therefore compiles exactly once per BO run
+(TPU-friendly — no retracing as the dataset grows).
 
 The loop state is checkpointable (preemption-safe): see ``BOState`` and
 repro/checkpoint."""

@@ -1,5 +1,5 @@
 """Paper core: graph random features for scalable GP covariance estimation."""
-from . import features, kernels_exact, modulation, walks  # noqa: F401
+from . import features, kernels_exact, linops, modulation, walks  # noqa: F401
 from .features import (  # noqa: F401
     feature_values,
     khat_cross_matvec,
@@ -10,6 +10,11 @@ from .features import (  # noqa: F401
     phi_matvec,
     phi_t_matvec,
     take_rows,
+)
+from .linops import (  # noqa: F401
+    KhatOperator,
+    PhiOperator,
+    ShiftedOperator,
 )
 from .modulation import Modulation, diffusion, learnable, matern  # noqa: F401
 from .walks import WalkTrace, sample_walks, sample_walks_for_nodes  # noqa: F401

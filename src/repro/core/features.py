@@ -7,24 +7,20 @@ modulation vector ``f``.  All products are O(M·K) where K = n·(l_max+1):
   * ``phi_t_matvec``   u = Φᵀ v         (scatter-add over slots)
   * ``khat_matvec``    y = K̂ v = Φ(Φᵀv) (Thm. 2: O(N) matvec)
 
-The Pallas `ell_spmv` kernel (repro/kernels) is a drop-in backend for the
-gather side; XLA's native scatter-add is kept for the transpose side
-(DESIGN.md §3).  Everything is differentiable w.r.t. ``f``.
+Every product dispatches through the backend registry in
+repro.kernels.dispatch ("xla" | "pallas" | "pallas-interpret"); the Pallas
+paths cover gather, scatter *and* the fused K̂-matvec, and carry custom
+VJPs, so everything stays differentiable w.r.t. ``f`` on every backend
+(DESIGN.md §3).  The operator-object view of the same products lives in
+repro.core.linops.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch
 from .walks import WalkTrace
-
-# Set by repro.kernels.ell_spmv.ops.enable() to route gathers through Pallas.
-_PALLAS_SPMV = None
-
-
-def set_pallas_spmv(fn) -> None:
-    global _PALLAS_SPMV
-    _PALLAS_SPMV = fn
 
 
 def feature_values(trace: WalkTrace, f: jax.Array) -> jax.Array:
@@ -36,31 +32,24 @@ def feature_values(trace: WalkTrace, f: jax.Array) -> jax.Array:
 
 def phi_matvec(trace: WalkTrace, f: jax.Array, u: jax.Array) -> jax.Array:
     """y = Φ u.  u: [N] or [N, R] → y: [M] or [M, R]."""
-    vals = feature_values(trace, f)
-    if _PALLAS_SPMV is not None:
-        return _PALLAS_SPMV(vals, trace.cols, u)
-    gathered = u[trace.cols]  # [M, K] or [M, K, R]
-    if u.ndim == 1:
-        return jnp.einsum("mk,mk->m", vals, gathered)
-    return jnp.einsum("mk,mkr->mr", vals, gathered)
+    return dispatch.phi_matvec(feature_values(trace, f), trace.cols, u)
 
 
 def phi_t_matvec(
     trace: WalkTrace, f: jax.Array, v: jax.Array, n_nodes: int
 ) -> jax.Array:
     """u = Φᵀ v.  v: [M] or [M, R] → u: [n_nodes] or [n_nodes, R]."""
-    vals = feature_values(trace, f)
-    cols = trace.cols.reshape(-1)
-    if v.ndim == 1:
-        contrib = (vals * v[:, None]).reshape(-1)
-        return jnp.zeros((n_nodes,), v.dtype).at[cols].add(contrib)
-    contrib = (vals[..., None] * v[:, None, :]).reshape(-1, v.shape[-1])
-    return jnp.zeros((n_nodes, v.shape[-1]), v.dtype).at[cols].add(contrib)
+    return dispatch.phi_t_matvec(
+        feature_values(trace, f), trace.cols, v, n_nodes
+    )
 
 
 def khat_matvec(trace: WalkTrace, f: jax.Array, v: jax.Array) -> jax.Array:
     """y = K̂ v = Φ (Φᵀ v) for square Φ (M == N)."""
-    return phi_matvec(trace, f, phi_t_matvec(trace, f, v, trace.n_nodes))
+    vals = feature_values(trace, f)
+    return dispatch.khat_matvec(
+        vals, trace.cols, vals, trace.cols, v, trace.n_nodes
+    )
 
 
 def khat_cross_matvec(
@@ -68,7 +57,11 @@ def khat_cross_matvec(
     n_nodes: int,
 ) -> jax.Array:
     """y = K̂[rows, cols] v = Φ_rows (Φ_colsᵀ v) — e.g. K̂_{·,x} in Eq. 12."""
-    return phi_matvec(trace_rows, f, phi_t_matvec(trace_cols, f, v, n_nodes))
+    return dispatch.khat_matvec(
+        feature_values(trace_rows, f), trace_rows.cols,
+        feature_values(trace_cols, f), trace_cols.cols,
+        v, n_nodes,
+    )
 
 
 def take_rows(trace: WalkTrace, rows: jax.Array) -> WalkTrace:

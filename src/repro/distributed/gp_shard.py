@@ -10,6 +10,12 @@ The paper's O(N^{3/2}) inference expressed as a TPU collective schedule
     Φ·(·) is purely local (each device computes its own rows).
   * CG dot products psum with the same axes.
 
+The matvec is not a fork of the single-device code: it is the *same*
+:class:`repro.core.linops.KhatOperator` / :class:`ShiftedOperator` with the
+psum injected as the operator's ``reduce`` hook (DESIGN.md §3), so backend
+dispatch, preconditioning and the mask/noise idioms stay identical across
+single-device and sharded paths.
+
 Per CG iteration the wire traffic is exactly one all-reduce of an N-vector
 (4 MB at N=1M, f32) — independent of walker count, which is why the method
 scales to pods."""
@@ -22,18 +28,31 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import features
+from ..core import linops
 from ..core.walks import WalkTrace
 from ..gp.cg import cg_solve, cg_solve_fixed
+
+# jax.shard_map with replication checks off, across the API move:
+# jax >= 0.6 exposes jax.shard_map(check_vma=...); 0.4/0.5 has
+# jax.experimental.shard_map.shard_map(check_rep=...).
+if hasattr(jax, "shard_map"):
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    def _shard_map(f, *, mesh, in_specs, out_specs):
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
 
 
 def _data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def sharded_khat_matvec_fn(n_nodes: int, axes: Sequence[str], sigma_n2, f,
-                           compress: bool = False):
-    """Local-rows matvec closure used inside shard_map.
+def psum_reduce(axes: Sequence[str], compress: bool = False):
+    """The all-reduce injected as the operators' ``reduce`` hook.
 
     ``compress`` casts the per-iteration N-vector all-reduce to bf16.
     §Perf verdict: REFUTED as a wire optimisation — jax/XLA upcasts bf16
@@ -42,17 +61,30 @@ def sharded_khat_matvec_fn(n_nodes: int, axes: Sequence[str], sigma_n2, f,
     Kept for documentation; true compression needs a custom collective
     (bf16 all-gather + local reduction) — future work."""
 
-    def mv(trace_local: WalkTrace, v_local):
-        partial = features.phi_t_matvec(trace_local, f, v_local, n_nodes)
+    def reduce(partial):
         if compress:
-            full = jax.lax.psum(partial.astype(jnp.bfloat16), axes).astype(
+            return jax.lax.psum(partial.astype(jnp.bfloat16), axes).astype(
                 jnp.float32
             )
-        else:
-            full = jax.lax.psum(partial, axes)
-        return features.phi_matvec(trace_local, f, full) + sigma_n2 * v_local
+        return jax.lax.psum(partial, axes)
 
-    return mv
+    return reduce
+
+
+def sharded_h_operator(
+    trace_local: WalkTrace,
+    f: jax.Array,
+    n_nodes: int,
+    axes: Sequence[str],
+    sigma_n2,
+    mask: jax.Array | None = None,
+    compress: bool = False,
+) -> linops.ShiftedOperator:
+    """H = (M) K̂ (M) + D over locally-owned Φ rows, psum-reduced."""
+    return linops.shifted(
+        trace_local, f, sigma_n2, n_nodes,
+        mask=mask, reduce=psum_reduce(axes, compress),
+    )
 
 
 def sharded_cg_solve(
@@ -76,29 +108,29 @@ def sharded_cg_solve(
     rowk = P(axes, None)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(rowk, rowk, rowk, P(), row),
         out_specs=row,
-        check_vma=False,
     )
     def run(cols, loads, lens, f, b_local):
         local = WalkTrace(cols, loads, lens)
-        mv = sharded_khat_matvec_fn(n_nodes, axes, sigma_n2, f, compress)
+        h = sharded_h_operator(local, f, n_nodes, axes, sigma_n2,
+                               compress=compress)
 
         def dot(u, v):
             return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
 
-        pre = features.khat_diag_approx(local, f) + sigma_n2
+        pre = h.diag_approx()
         if fixed_unrolled:
             res = cg_solve_fixed(
-                lambda v: mv(local, v), b_local,
-                iters=max_iters, precond_diag=pre, dot=dot, unroll=True,
+                h, b_local, iters=max_iters, precond_diag=pre, dot=dot,
+                unroll=True,
             )
         else:
             res = cg_solve(
-                lambda v: mv(local, v), b_local,
-                tol=tol, max_iters=max_iters, precond_diag=pre, dot=dot,
+                h, b_local, tol=tol, max_iters=max_iters, precond_diag=pre,
+                dot=dot,
             )
         return res.x
 
@@ -119,30 +151,25 @@ def sharded_posterior_sample(
 
     Training-set structure is expressed as a mask so every tensor stays
     row-sharded: H = M K̂ M + D where D = σ² on observed rows, 1e6 outside
-    (infinite noise ⇒ unobserved rows carry no information)."""
+    (infinite noise ⇒ unobserved rows carry no information) — the masked
+    form of :class:`repro.core.linops.ShiftedOperator`."""
     axes = _data_axes(mesh)
     n_nodes = trace.n_nodes
     row = P(axes)
     rowk = P(axes, None)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(rowk, rowk, rowk, P(), row, row, P()),
         out_specs=row,
-        check_vma=False,
     )
     def run(cols, loads, lens, f, mask, y, key):
         local = WalkTrace(cols, loads, lens)
         noise = jnp.where(mask > 0, sigma_n2, 1e6)
-
-        def mv(v):
-            # cg_solve hands us [rows, R]; mask/noise are [rows].
-            m = mask[:, None] if v.ndim == 2 else mask
-            d = noise[:, None] if v.ndim == 2 else noise
-            partial = features.phi_t_matvec(local, f, m * v, n_nodes)
-            full = jax.lax.psum(partial, axes)
-            return m * features.phi_matvec(local, f, full) + d * v
+        h = sharded_h_operator(local, f, n_nodes, axes, noise, mask=mask)
+        khat = h.khat          # same operator, reduce hook included
+        phi = khat.rows
 
         def dot(u, v):
             return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
@@ -151,16 +178,13 @@ def sharded_posterior_sample(
         # identical on every device — derive it from the replicated key.
         kw, ke = jax.random.split(key)
         w = jax.random.normal(kw, (n_nodes,), jnp.float32)
-        g = features.phi_matvec(local, f, w)
+        g = phi.matvec(w)
         eps = jnp.sqrt(sigma_n2) * jax.random.normal(
             jax.random.fold_in(ke, jax.lax.axis_index(axes[-1])), g.shape
         )
         resid = mask * (y - g - eps)
-        pre = features.khat_diag_approx(local, f) + noise
-        u = cg_solve(mv, resid, tol=1e-5, max_iters=max_iters,
-                     precond_diag=pre, dot=dot).x
-        partial = features.phi_t_matvec(local, f, mask * u, n_nodes)
-        full = jax.lax.psum(partial, axes)
-        return g + features.phi_matvec(local, f, full)
+        u = cg_solve(h, resid, tol=1e-5, max_iters=max_iters,
+                     precond_diag=h.diag_approx(), dot=dot).x
+        return g + khat.matvec(mask * u)
 
     return run(trace.cols, trace.loads, trace.lens, f, train_mask, y_full, key)

@@ -1,6 +1,12 @@
 from . import cg, exact, mll, posterior, variational  # noqa: F401
 from .cg import CGResult, cg_solve  # noqa: F401
-from .mll import fit_hyperparams, init_hyperparams, make_h_matvec, noise_var  # noqa: F401
+from .mll import (  # noqa: F401
+    fit_hyperparams,
+    init_hyperparams,
+    make_h_matvec,
+    make_h_operator,
+    noise_var,
+)
 from .posterior import (  # noqa: F401
     gaussian_nlpd,
     pathwise_samples,

@@ -19,6 +19,17 @@ class CGResult(NamedTuple):
     resnorm: jax.Array    # [R] final residual norms
 
 
+def _jacobi(precond_diag):
+    """M⁻¹ from a diagonal; rows with a zero diagonal (isolated nodes whose
+    diag_approx vanishes) fall back to the identity instead of dividing by
+    zero — any SPD approximation is a valid Jacobi preconditioner."""
+    if precond_diag is None:
+        return lambda v: v
+    inv = jnp.where(precond_diag > 0, 1.0 / jnp.maximum(precond_diag, 1e-30), 1.0)
+    inv = inv[:, None]
+    return lambda v: inv * v
+
+
 def cg_solve(
     matvec: Callable[[jax.Array], jax.Array],
     b: jax.Array,
@@ -42,11 +53,7 @@ def cg_solve(
     n, r = b.shape
     if dot is None:
         dot = lambda u, v: jnp.sum(u * v, axis=0)
-    if precond_diag is None:
-        apply_m = lambda v: v
-    else:
-        inv = (1.0 / precond_diag)[:, None]
-        apply_m = lambda v: inv * v
+    apply_m = _jacobi(precond_diag)
 
     bnorm = jnp.sqrt(dot(b, b))
     thresh = tol * jnp.maximum(bnorm, 1e-30)
@@ -98,11 +105,7 @@ def cg_solve_fixed(
         b = b[:, None]
     if dot is None:
         dot = lambda u, v: jnp.sum(u * v, axis=0)
-    if precond_diag is None:
-        apply_m = lambda v: v
-    else:
-        inv = (1.0 / precond_diag)[:, None]
-        apply_m = lambda v: inv * v
+    apply_m = _jacobi(precond_diag)
 
     x0 = jnp.zeros_like(b)
     z0 = apply_m(b)

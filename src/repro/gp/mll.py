@@ -18,8 +18,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from ..core import features
+from ..core import linops
 from ..core.modulation import Modulation
+from ..kernels import dispatch as _dispatch
 from ..core.walks import WalkTrace
 from ..optim.adamw import AdamW
 from .cg import cg_solve
@@ -36,25 +37,22 @@ def noise_var(params: dict) -> jax.Array:
     return jnp.exp(2.0 * params["log_sigma_n"])
 
 
-def make_h_matvec(
+def make_h_operator(
     trace_x: WalkTrace, f: jax.Array, sigma_n2: jax.Array, n_nodes: int
-) -> Callable:
-    """V ↦ (K̂_xx + D) V via two sparse products (Eq. 7 remark).
+) -> linops.ShiftedOperator:
+    """H = K̂_xx + D as a backend-dispatched operator (Eq. 7 remark).
 
     ``sigma_n2`` may be a scalar (σ_n² I) or a [T] vector (heteroscedastic
     diagonal — used by the BO loop's static-shape padding, where padded
     observation slots carry ~infinite noise and therefore no information)."""
+    return linops.shifted(trace_x, f, sigma_n2, n_nodes)
 
-    def mv(v):
-        noise = sigma_n2[:, None] if jnp.ndim(sigma_n2) == 1 and v.ndim == 2 else sigma_n2
-        return (
-            features.phi_matvec(
-                trace_x, f, features.phi_t_matvec(trace_x, f, v, n_nodes)
-            )
-            + noise * v
-        )
 
-    return mv
+def make_h_matvec(
+    trace_x: WalkTrace, f: jax.Array, sigma_n2: jax.Array, n_nodes: int
+) -> Callable:
+    """Callable view of :func:`make_h_operator` (operators are callable)."""
+    return make_h_operator(trace_x, f, sigma_n2, n_nodes)
 
 
 def mll_surrogate_loss(
@@ -88,15 +86,15 @@ def mll_surrogate_loss(
 
     f_sg = jax.lax.stop_gradient(f)
     s2_sg = jax.lax.stop_gradient(sigma_n2)
-    mv_sg = make_h_matvec(trace_x, f_sg, s2_sg, n_nodes)
-    pre = features.khat_diag_approx(trace_x, f_sg) + s2_sg
-    sol = cg_solve(mv_sg, b, tol=cg_tol, max_iters=cg_iters, precond_diag=pre)
+    h_sg = make_h_operator(trace_x, f_sg, s2_sg, n_nodes)
+    sol = cg_solve(h_sg, b, tol=cg_tol, max_iters=cg_iters,
+                   precond_diag=h_sg.diag_approx())
     v = jax.lax.stop_gradient(sol.x)
     v_y, v_z = v[:, 0], v[:, 1:]
 
-    mv = make_h_matvec(trace_x, f, sigma_n2, n_nodes)
-    hv_y = mv(v_y)
-    hz = mv(z)
+    h = make_h_operator(trace_x, f, sigma_n2, n_nodes)
+    hv_y = h.matvec(v_y)
+    hz = h.matvec(z)
     term_fit = -0.5 * jnp.dot(v_y, hv_y)
     term_tr = 0.5 * jnp.mean(jnp.sum(v_z * hz, axis=0))
     loss = term_fit + term_tr
@@ -117,16 +115,21 @@ class FitResult:
 
 @partial(
     jax.jit,
-    static_argnames=("mod", "opt", "n_nodes", "n_probes", "cg_tol", "cg_iters", "chunk"),
+    static_argnames=(
+        "mod", "opt", "n_nodes", "n_probes", "cg_tol", "cg_iters", "chunk",
+        "spmv_backend",
+    ),
 )
 def _fit_chunk(
     params, opt_state, key, trace_x, y, obs_mask,
-    *, mod, opt, n_nodes, n_probes, cg_tol, cg_iters, chunk,
+    *, mod, opt, n_nodes, n_probes, cg_tol, cg_iters, chunk, spmv_backend,
 ):
     """``chunk`` Adam steps fused into one lax.scan (single dispatch/compile).
 
     Module-level + hashable statics ⇒ the executable is cached across
-    repeated fits (critical for the BO loop, which refits every few steps)."""
+    repeated fits (critical for the BO loop, which refits every few steps).
+    ``spmv_backend`` is resolved by the caller: backend selection happens at
+    trace time, so it has to participate in the jit cache key."""
 
     def one(carry, key_i):
         p, s = carry
@@ -140,7 +143,8 @@ def _fit_chunk(
         return (p, s), (loss, aux["datafit"], aux["sigma_n2"], aux["cg_iters"])
 
     keys = jax.random.split(key, chunk)
-    (params, opt_state), traces = jax.lax.scan(one, (params, opt_state), keys)
+    with _dispatch.use_backend(spmv_backend):
+        (params, opt_state), traces = jax.lax.scan(one, (params, opt_state), keys)
     return params, opt_state, traces
 
 
@@ -162,7 +166,10 @@ def fit_hyperparams(
 ) -> FitResult:
     """Adam ascent on the LML (paper §3.2 'hyperparameter learning')."""
     k_init, k_loop = jax.random.split(key)
-    params = init_params or init_hyperparams(mod, k_init, init_noise)
+    # `init_params or ...` would silently discard a legitimate empty dict.
+    if init_params is None:
+        init_params = init_hyperparams(mod, k_init, init_noise)
+    params = init_params
     opt = AdamW(lr=lr)
     opt_state = opt.init(params)
     if obs_mask is None:
@@ -177,6 +184,7 @@ def fit_hyperparams(
             trace_x, y, obs_mask,
             mod=mod, opt=opt, n_nodes=n_nodes, n_probes=n_probes,
             cg_tol=cg_tol, cg_iters=cg_iters, chunk=this,
+            spmv_backend=_dispatch.get_backend(),
         )
         done += this
         loss, fit, s2, iters = (jnp.asarray(t)[-1] for t in traces)

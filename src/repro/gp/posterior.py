@@ -11,13 +11,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core import features
+from ..core import features, linops
 from ..core.walks import WalkTrace
+from ..kernels import dispatch
 from .cg import cg_solve
-from .mll import make_h_matvec
+from .mll import make_h_operator
 
 
-@partial(jax.jit, static_argnames=("cg_iters",))
 def posterior_mean(
     trace: WalkTrace,
     train_nodes: jax.Array,
@@ -31,18 +31,39 @@ def posterior_mean(
     """MAP prediction m = K̂_{·x} (K̂_xx + σ²I)⁻¹ y over all N nodes (Eq. 3).
 
     ``obs_mask`` enables static-shape padding (padded slots ⇒ ∞ noise)."""
+    # The spmv backend resolves at trace time, so it must be part of the jit
+    # cache key — resolve it *outside* the jitted impl and pass it static.
+    return _posterior_mean(
+        trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask,
+        spmv_backend=dispatch.get_backend(),
+    )
+
+
+@partial(jax.jit, static_argnames=("cg_iters", "spmv_backend"))
+def _posterior_mean(
+    trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask,
+    *, spmv_backend,
+):
+    with dispatch.use_backend(spmv_backend):
+        return _posterior_mean_impl(
+            trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask
+        )
+
+
+def _posterior_mean_impl(
+    trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask
+):
     n = trace.n_nodes
     noise = sigma_n2 if obs_mask is None else jnp.where(obs_mask > 0, sigma_n2, 1e6)
     if obs_mask is not None:
         y = y * obs_mask
     trace_x = features.take_rows(trace, train_nodes)
-    mv = make_h_matvec(trace_x, f, noise, n)
-    pre = features.khat_diag_approx(trace_x, f) + noise
-    alpha = cg_solve(mv, y, tol=cg_tol, max_iters=cg_iters, precond_diag=pre).x
-    return features.khat_cross_matvec(trace, trace_x, f, alpha, n)
+    h = make_h_operator(trace_x, f, noise, n)
+    alpha = cg_solve(h, y, tol=cg_tol, max_iters=cg_iters,
+                     precond_diag=h.diag_approx()).x
+    return linops.khat_cross(trace, trace_x, f, n).matvec(alpha)
 
 
-@partial(jax.jit, static_argnames=("n_samples", "cg_iters"))
 def pathwise_samples(
     trace: WalkTrace,
     train_nodes: jax.Array,
@@ -58,12 +79,34 @@ def pathwise_samples(
     """Draw ``n_samples`` joint posterior samples over all N nodes (Eq. 12).
 
     Returns [N, n_samples]."""
+    return _pathwise_samples(
+        trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
+        obs_mask, spmv_backend=dispatch.get_backend(),
+    )
+
+
+@partial(jax.jit, static_argnames=("n_samples", "cg_iters", "spmv_backend"))
+def _pathwise_samples(
+    trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
+    obs_mask, *, spmv_backend,
+):
+    with dispatch.use_backend(spmv_backend):
+        return _pathwise_samples_impl(
+            trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol,
+            cg_iters, obs_mask,
+        )
+
+
+def _pathwise_samples_impl(
+    trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
+    obs_mask,
+):
     n = trace.n_nodes
     t = train_nodes.shape[0]
     noise = sigma_n2 if obs_mask is None else jnp.where(obs_mask > 0, sigma_n2, 1e6)
     k_w, k_eps = jax.random.split(key)
     w = jax.random.normal(k_w, (n, n_samples), dtype=jnp.float32)
-    g = features.phi_matvec(trace, f, w)                       # prior sample
+    g = linops.phi(trace, f, n).matvec(w)                      # prior sample
     g_x = g[train_nodes]
     eps = jnp.sqrt(sigma_n2) * jax.random.normal(k_eps, (t, n_samples))
     resid = y[:, None] - (g_x + eps)
@@ -71,10 +114,10 @@ def pathwise_samples(
         resid = resid * obs_mask[:, None]
 
     trace_x = features.take_rows(trace, train_nodes)
-    mv = make_h_matvec(trace_x, f, noise, n)
-    pre = features.khat_diag_approx(trace_x, f) + noise
-    u = cg_solve(mv, resid, tol=cg_tol, max_iters=cg_iters, precond_diag=pre).x
-    return g + features.khat_cross_matvec(trace, trace_x, f, u, n)
+    h = make_h_operator(trace_x, f, noise, n)
+    u = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
+                 precond_diag=h.diag_approx()).x
+    return g + linops.khat_cross(trace, trace_x, f, n).matvec(u)
 
 
 def predictive_moments_from_samples(samples: jax.Array):

@@ -12,7 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core import features
+from ..core import linops
 from ..core.modulation import Modulation
 from ..core.walks import WalkTrace
 from ..optim.adamw import AdamW
@@ -20,8 +20,9 @@ from ..optim.adamw import AdamW
 
 def kernel_blocks(trace: WalkTrace, f, inducing, nodes, n_nodes, jitter=1e-4):
     """K_uu [M,M], K_xu [T,M] from GRF features (dense Φ rows; M,T small)."""
-    phi_u = features.materialize_phi(features.take_rows(trace, inducing), f, n_nodes)
-    phi_x = features.materialize_phi(features.take_rows(trace, nodes), f, n_nodes)
+    phi = linops.phi(trace, f, n_nodes)
+    phi_u = phi.take_rows(inducing).dense()
+    phi_x = phi.take_rows(nodes).dense()
     k_uu = phi_u @ phi_u.T + jitter * jnp.eye(inducing.shape[0])
     k_xu = phi_x @ phi_u.T
     k_xx_diag = jnp.sum(phi_x * phi_x, axis=1)

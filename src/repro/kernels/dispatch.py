@@ -1,0 +1,127 @@
+"""Backend registry for the GRF sparse linear-algebra stack (DESIGN.md §3).
+
+Every sparse product in the codebase — ``phi_matvec`` (gather), ``phi_t_matvec``
+(scatter) and the fused ``khat_matvec`` — is dispatched through this registry
+instead of hard-coding an implementation at the call site.  Three backends:
+
+  * ``"xla"``              pure-jnp gather/scatter (differentiable, portable).
+  * ``"pallas"``           compiled Mosaic kernels (TPU).
+  * ``"pallas-interpret"`` the same kernels through the Pallas interpreter
+                           (CPU-testable bit-accurate stand-in for "pallas").
+
+Resolution order: active :func:`use_backend` context > :func:`set_backend`
+global > auto (``"pallas"`` on TPU, ``"xla"`` elsewhere).  Backend selection
+happens at Python trace time, so switching backends retraces but adds zero
+per-call overhead inside jit.
+
+The Pallas paths are wrapped in ``jax.custom_vjp`` (all three products are
+linear in both ``vals`` and the dense operand), so hyperparameter gradients
+flow through the kernels — the XLA backend is never silently required.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+import numpy as np
+
+VALID_BACKENDS = ("xla", "pallas", "pallas-interpret")
+
+_global_backend: str | None = None
+_override: ContextVar[str | None] = ContextVar("grf_spmv_backend", default=None)
+
+
+def _check(name: str) -> str:
+    if name not in VALID_BACKENDS:
+        raise ValueError(f"unknown spmv backend {name!r}; valid: {VALID_BACKENDS}")
+    return name
+
+
+def auto_backend() -> str:
+    """Default backend for the current platform."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def get_backend() -> str:
+    """Resolve the active backend (context override > global > auto)."""
+    ov = _override.get()
+    if ov is not None:
+        return ov
+    if _global_backend is not None:
+        return _global_backend
+    return auto_backend()
+
+
+def set_backend(name: str | None) -> None:
+    """Set the process-global backend; ``None`` restores auto-selection."""
+    global _global_backend
+    _global_backend = None if name is None else _check(name)
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped backend override (re-entrant, safe under nested contexts)."""
+    token = _override.set(_check(name))
+    try:
+        yield
+    finally:
+        _override.reset(token)
+
+
+def _interpret(backend: str) -> bool:
+    return backend == "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# Dispatched products.  vals/cols are the ELL payload ([M, K]); the dense
+# operand is [N] or [N, R].  All are linear maps with hand-written VJPs on
+# the Pallas paths (see kernels/ell_spmv/ops.py).
+# ---------------------------------------------------------------------------
+
+
+def phi_matvec(vals, cols, u, *, backend: str | None = None):
+    """y = Φ u (gather-reduce)."""
+    backend = _check(backend) if backend is not None else get_backend()
+    from .ell_spmv import ops
+
+    if backend == "xla":
+        return ops.spmv_xla(vals, cols, u)
+    return ops.spmv_pallas(vals, cols, u, interpret=_interpret(backend))
+
+
+def phi_t_matvec(vals, cols, v, n_nodes: int, *, backend: str | None = None):
+    """u = Φᵀ v (scatter-add)."""
+    backend = _check(backend) if backend is not None else get_backend()
+    from .ell_spmv import ops
+
+    if backend == "xla":
+        return ops.spmv_t_xla(vals, cols, v, n_nodes)
+    return ops.spmv_t_pallas(vals, cols, v, n_nodes, interpret=_interpret(backend))
+
+
+def khat_matvec(
+    vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes: int,
+    *, backend: str | None = None,
+):
+    """y = Φ_rows (Φ_colsᵀ v) — the K̂-matvec, fused on Pallas backends.
+
+    The fused kernel keeps the intermediate u = Φᵀv resident in VMEM across
+    the gather pass (never spilling the N-vector to HBM between the two
+    products); the XLA path composes the two products.
+    """
+    backend = _check(backend) if backend is not None else get_backend()
+    from .ell_spmv import ops
+
+    if backend == "xla":
+        u = ops.spmv_t_xla(vals_cols, cols_cols, v, n_nodes)
+        return ops.spmv_xla(vals_rows, cols_rows, u)
+    return ops.khat_pallas(
+        vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes,
+        interpret=_interpret(backend),
+    )
+
+
+def float0_zeros(x):
+    """Symbolic-zero cotangent for integer (non-differentiable) array args."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)

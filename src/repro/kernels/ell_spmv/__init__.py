@@ -1,3 +1,12 @@
 from .ell_spmv import ell_spmv  # noqa: F401
-from .ops import disable, enable, spmv  # noqa: F401
-from .ref import ell_spmv_ref  # noqa: F401
+from .ell_spmv_t import ell_spmv_t  # noqa: F401
+from .khat_fused import khat_matvec_fused  # noqa: F401
+from .ops import (  # noqa: F401
+    disable,
+    enable,
+    khat_pallas,
+    spmv,
+    spmv_pallas,
+    spmv_t_pallas,
+)
+from .ref import ell_spmv_ref, ell_spmv_t_ref, khat_matvec_ref  # noqa: F401

@@ -1,30 +1,157 @@
-"""jit'd public wrapper for the ELL spmv Pallas kernel.
+"""Backend entry points for the ELL sparse-product family.
 
-``enable()`` routes repro.core.features.phi_matvec through the kernel
-(interpret mode on CPU; compiled Mosaic on real TPUs)."""
+``spmv_xla`` / ``spmv_t_xla`` are the pure-jnp paths (autodiff for free).
+``spmv_pallas`` / ``spmv_t_pallas`` / ``khat_pallas`` wrap the Pallas
+kernels in ``jax.custom_vjp``: all three products are linear in both the
+ELL values and the dense operand, and each cotangent is itself one of the
+products, so the backward pass runs on the *same* kernels (Φᵀ is the
+gradient of Φ and vice versa).  Hyperparameter learning (gp/mll.py) can
+therefore differentiate straight through the Pallas backends.
+
+Selection lives in repro.kernels.dispatch — ``enable()`` / ``disable()``
+are kept as thin aliases for the registry (the old
+``features.set_pallas_spmv`` module-global is gone).
+"""
 from __future__ import annotations
 
-import jax
+import functools
 
-from ...core import features
+import jax
+import jax.numpy as jnp
+
+from ..dispatch import float0_zeros as _float0
 from .ell_spmv import ell_spmv
-from .ref import ell_spmv_ref
+from .ell_spmv_t import ell_spmv_t
+from .khat_fused import khat_matvec_fused
+from .ref import ell_spmv_ref, ell_spmv_t_ref
+
+spmv_xla = ell_spmv_ref
+spmv_t_xla = ell_spmv_t_ref
+
+
+def _dvals(cot_rows, cols, dense):
+    """∂⟨cot, Φ·⟩/∂vals[m,k] = cot[m]·dense[cols[m,k]] (Σ_r for multi-RHS)."""
+    gathered = dense[cols]  # [M, K] or [M, K, R]
+    if dense.ndim == 1:
+        return cot_rows[:, None] * gathered
+    return jnp.einsum("mr,mkr->mk", cot_rows, gathered)
+
+
+# --- y = Φ u ---------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _spmv_p(vals, cols, u, interpret):
+    return ell_spmv(vals, cols, u, interpret=interpret)
+
+
+def _spmv_fwd(vals, cols, u, interpret):
+    return _spmv_p(vals, cols, u, interpret), (vals, cols, u)
+
+
+def _spmv_bwd(interpret, res, g):
+    vals, cols, u = res
+    d_u = ell_spmv_t(vals, cols, g, u.shape[0], interpret=interpret)
+    return _dvals(g, cols, u), _float0(cols), d_u
+
+
+_spmv_p.defvjp(_spmv_fwd, _spmv_bwd)
+
+
+def spmv_pallas(vals, cols, u, *, interpret: bool = False):
+    return _spmv_p(vals, cols, u, interpret)
+
+
+# --- u = Φᵀ v --------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _spmv_t_p(vals, cols, v, n_nodes, interpret):
+    return ell_spmv_t(vals, cols, v, n_nodes, interpret=interpret)
+
+
+def _spmv_t_fwd(vals, cols, v, n_nodes, interpret):
+    return _spmv_t_p(vals, cols, v, n_nodes, interpret), (vals, cols, v)
+
+
+def _spmv_t_bwd(n_nodes, interpret, res, g):
+    vals, cols, v = res
+    d_v = ell_spmv(vals, cols, g, interpret=interpret)
+    return _dvals(v, cols, g), _float0(cols), d_v
+
+
+_spmv_t_p.defvjp(_spmv_t_fwd, _spmv_t_bwd)
+
+
+def spmv_t_pallas(vals, cols, v, n_nodes: int, *, interpret: bool = False):
+    return _spmv_t_p(vals, cols, v, n_nodes, interpret)
+
+
+# --- y = Φ_rows (Φ_colsᵀ v) ------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _khat_p(vals_g, cols_g, vals_s, cols_s, v, n_nodes, interpret):
+    return khat_matvec_fused(
+        vals_g, cols_g, vals_s, cols_s, v, n_nodes, interpret=interpret
+    )
+
+
+def _khat_fwd(vals_g, cols_g, vals_s, cols_s, v, n_nodes, interpret):
+    y = _khat_p(vals_g, cols_g, vals_s, cols_s, v, n_nodes, interpret)
+    return y, (vals_g, cols_g, vals_s, cols_s, v)
+
+
+def _khat_bwd(n_nodes, interpret, res, g):
+    vals_g, cols_g, vals_s, cols_s, v = res
+    # y = Φg u, u = Φsᵀ v.  Cotangents (both recomputed with the kernels):
+    #   d_v      = Φs Φgᵀ g                 (fused, roles swapped)
+    #   d_vals_g = g ⊙ u[cols_g],  u = Φsᵀ v
+    #   d_vals_s = v ⊙ w[cols_s],  w = Φgᵀ g
+    u = ell_spmv_t(vals_s, cols_s, v, n_nodes, interpret=interpret)
+    w = ell_spmv_t(vals_g, cols_g, g, n_nodes, interpret=interpret)
+    d_v = _khat_p(vals_s, cols_s, vals_g, cols_g, g, n_nodes, interpret)
+    return (
+        _dvals(g, cols_g, u), _float0(cols_g),
+        _dvals(v, cols_s, w), _float0(cols_s),
+        d_v,
+    )
+
+
+_khat_p.defvjp(_khat_fwd, _khat_bwd)
+
+
+def khat_pallas(
+    vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes: int,
+    *, interpret: bool = False,
+):
+    return _khat_p(
+        vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes, interpret
+    )
+
+
+# --- legacy toggles (now thin wrappers over the dispatch registry) ---------
 
 
 def spmv(vals, cols, u, *, use_pallas: bool = True, interpret: bool | None = None):
     if not use_pallas:
-        return ell_spmv_ref(vals, cols, u)
+        return spmv_xla(vals, cols, u)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return ell_spmv(vals, cols, u, interpret=interpret)
+    return spmv_pallas(vals, cols, u, interpret=interpret)
 
 
 def enable(interpret: bool | None = None) -> None:
-    """Route GRF Φ-matvecs through the Pallas kernel."""
-    features.set_pallas_spmv(
-        lambda vals, cols, u: spmv(vals, cols, u, interpret=interpret)
-    )
+    """Route GRF sparse products through the Pallas kernels (global)."""
+    from .. import dispatch
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    dispatch.set_backend("pallas-interpret" if interpret else "pallas")
 
 
 def disable() -> None:
-    features.set_pallas_spmv(None)
+    """Restore automatic backend selection."""
+    from .. import dispatch
+
+    dispatch.set_backend(None)

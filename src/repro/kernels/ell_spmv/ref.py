@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the ELL sparse matvec (y = Φ u, gather side)."""
+"""Pure-jnp oracles for the ELL sparse-product family.
+
+These define the semantics the Pallas kernels must reproduce (parity tests
+in tests/test_kernels_ell.py) and double as the ``"xla"`` backend paths in
+kernels/dispatch.py — native gather / scatter-add, fully differentiable.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -17,3 +22,37 @@ def ell_spmv_ref(vals: jnp.ndarray, cols: jnp.ndarray, u: jnp.ndarray) -> jnp.nd
     if u.ndim == 1:
         return jnp.einsum("mk,mk->m", vals, gathered)
     return jnp.einsum("mk,mkr->mr", vals, gathered)
+
+
+def ell_spmv_t_ref(
+    vals: jnp.ndarray, cols: jnp.ndarray, v: jnp.ndarray, n_nodes: int
+) -> jnp.ndarray:
+    """u[j] = Σ_{m,k : cols[m,k]=j} vals[m,k] · v[m]  (u = Φᵀ v).
+
+    Args:
+      vals: f32[M, K] ELL values.
+      cols: i32[M, K] ELL column indices.
+      v: f32[M] or f32[M, R] dense operand.
+      n_nodes: output length N.
+    Returns: f32[N] or f32[N, R].
+    """
+    flat_cols = cols.reshape(-1)
+    if v.ndim == 1:
+        contrib = (vals * v[:, None]).reshape(-1)
+        return jnp.zeros((n_nodes,), contrib.dtype).at[flat_cols].add(contrib)
+    contrib = (vals[..., None] * v[:, None, :]).reshape(-1, v.shape[-1])
+    return jnp.zeros((n_nodes, v.shape[-1]), contrib.dtype).at[flat_cols].add(contrib)
+
+
+def khat_matvec_ref(
+    vals_rows: jnp.ndarray,
+    cols_rows: jnp.ndarray,
+    vals_cols: jnp.ndarray,
+    cols_cols: jnp.ndarray,
+    v: jnp.ndarray,
+    n_nodes: int,
+) -> jnp.ndarray:
+    """y = Φ_rows (Φ_colsᵀ v) — the (cross-)K̂ matvec, unfused."""
+    return ell_spmv_ref(
+        vals_rows, cols_rows, ell_spmv_t_ref(vals_cols, cols_cols, v, n_nodes)
+    )

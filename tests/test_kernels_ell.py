@@ -60,3 +60,151 @@ def test_block_size_invariance(block_m):
     got = ell_spmv(vals, cols, u, block_m=block_m, interpret=True)
     want = ell_spmv_ref(vals, cols, u)
     np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+# --- transpose (scatter) kernel -------------------------------------------
+
+T_CASES = [
+    (16, 4, 16, None),
+    (100, 33, 257, None),     # nothing divides anything
+    (257, 16, 100, None),     # M > N (tall Φ)
+    (100, 33, 257, 5),        # multi-RHS
+    (33, 7, 19, 2),
+    (512, 40, 2048, None),    # acceptance: N up to 2048
+    (512, 40, 2048, 3),
+]
+
+
+@pytest.mark.parametrize("m,k,n,r", T_CASES)
+def test_spmv_t_matches_oracle(m, k, n, r):
+    from repro.kernels.ell_spmv import ell_spmv_t, ell_spmv_t_ref
+
+    rng = np.random.default_rng(m * 1000 + k + n)
+    vals = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, n, (m, k)), jnp.int32)
+    v = jnp.asarray(
+        rng.standard_normal((m,) if r is None else (m, r)), jnp.float32
+    )
+    got = ell_spmv_t(vals, cols, v, n, interpret=True)
+    want = ell_spmv_t_ref(vals, cols, v, n)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_spmv_t_vs_dense_phi():
+    """Φᵀv against an explicitly materialised dense Φ."""
+    rng = np.random.default_rng(0)
+    m, k, n = 200, 12, 333
+    vals = np.zeros((m, k), np.float32)
+    vals[:, :7] = rng.standard_normal((m, 7))
+    cols = rng.integers(0, n, (m, k)).astype(np.int32)
+    phi = np.zeros((m, n), np.float32)
+    for i in range(m):
+        for j in range(k):
+            phi[i, cols[i, j]] += vals[i, j]
+    v = rng.standard_normal((m, 2)).astype(np.float32)
+    from repro.kernels.ell_spmv import ell_spmv_t
+
+    got = ell_spmv_t(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(v), n,
+                     interpret=True)
+    np.testing.assert_allclose(np.array(got), phi.T @ v, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_m", [8, 32, 256])
+def test_spmv_t_block_size_invariance(block_m):
+    from repro.kernels.ell_spmv import ell_spmv_t, ell_spmv_t_ref
+
+    rng = np.random.default_rng(7)
+    vals = jnp.asarray(rng.standard_normal((90, 12)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, 50, (90, 12)), jnp.int32)
+    v = jnp.asarray(rng.standard_normal(90), jnp.float32)
+    got = ell_spmv_t(vals, cols, v, 50, block_m=block_m, interpret=True)
+    want = ell_spmv_t_ref(vals, cols, v, 50)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+# --- fused K̂-matvec kernel ------------------------------------------------
+
+K_CASES = [
+    (64, 64, 8, 8, 64, None),        # square K̂
+    (100, 100, 33, 33, 100, 4),      # square, multi-RHS
+    (300, 77, 8, 12, 257, None),     # cross K̂[rows, cols], Mr > Ms
+    (77, 300, 12, 8, 257, 3),        # cross, Ms > Mr, multi-RHS
+    (2048, 2048, 20, 20, 2048, None),  # acceptance: N up to 2048
+    (2048, 512, 20, 20, 2048, 2),
+]
+
+
+@pytest.mark.parametrize("mg,ms,kg,ks,n,r", K_CASES)
+def test_khat_fused_matches_oracle(mg, ms, kg, ks, n, r):
+    from repro.kernels.ell_spmv import khat_matvec_fused, khat_matvec_ref
+
+    rng = np.random.default_rng(mg + ms * 7 + n)
+    vals_g = jnp.asarray(rng.standard_normal((mg, kg)), jnp.float32)
+    cols_g = jnp.asarray(rng.integers(0, n, (mg, kg)), jnp.int32)
+    vals_s = jnp.asarray(rng.standard_normal((ms, ks)), jnp.float32)
+    cols_s = jnp.asarray(rng.integers(0, n, (ms, ks)), jnp.int32)
+    v = jnp.asarray(
+        rng.standard_normal((ms,) if r is None else (ms, r)), jnp.float32
+    )
+    got = khat_matvec_fused(vals_g, cols_g, vals_s, cols_s, v, n, interpret=True)
+    want = khat_matvec_ref(vals_g, cols_g, vals_s, cols_s, v, n)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_khat_fused_vs_dense_khat():
+    """Fused kernel against materialize_khat on a real walk trace (the
+    acceptance reference: dense K̂ = ΦΦᵀ)."""
+    import jax
+
+    from repro.core import features, modulation, walks
+    from repro.graphs import generators
+    from repro.kernels.ell_spmv import khat_matvec_fused
+
+    g = generators.grid2d(8, 8)
+    n = g.n_nodes
+    mod = modulation.diffusion(l_max=4)
+    f = mod(mod.init(jax.random.PRNGKey(0)))
+    tr = walks.sample_walks(g, jax.random.PRNGKey(1), n_walkers=10,
+                            p_halt=0.2, l_max=4)
+    vals = features.feature_values(tr, f)
+    k_dense = np.array(features.materialize_khat(tr, f, n))
+    rng = np.random.default_rng(3)
+    v = rng.standard_normal((n, 3)).astype(np.float32)
+    got = khat_matvec_fused(vals, tr.cols, vals, tr.cols, jnp.asarray(v), n,
+                            interpret=True)
+    want = k_dense @ v
+    scale = np.abs(want).max()
+    np.testing.assert_allclose(np.array(got) / scale, want / scale,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_backward_matches_xla():
+    """custom_vjp: gradients through the Pallas kernels equal XLA gradients
+    in both vals and the dense operand."""
+    import jax
+
+    from repro.kernels.ell_spmv import ops
+
+    rng = np.random.default_rng(11)
+    m, k, n = 60, 9, 45
+    vals = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, n, (m, k)), jnp.int32)
+    v = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    pairs = [
+        (lambda vl, x: jnp.sum(ops.spmv_pallas(vl, cols, x, interpret=True) ** 2),
+         lambda vl, x: jnp.sum(ops.spmv_xla(vl, cols, x) ** 2), u),
+        (lambda vl, x: jnp.sum(ops.spmv_t_pallas(vl, cols, x, n, interpret=True) ** 2),
+         lambda vl, x: jnp.sum(ops.spmv_t_xla(vl, cols, x, n) ** 2), v),
+        (lambda vl, x: jnp.sum(
+            ops.khat_pallas(vl, cols, vl, cols, x, n, interpret=True) ** 2),
+         lambda vl, x: jnp.sum(ops.spmv_xla(
+             vl, cols, ops.spmv_t_xla(vl, cols, x, n)) ** 2), v),
+    ]
+    for f_pallas, f_xla, x in pairs:
+        gp = jax.grad(f_pallas, argnums=(0, 1))(vals, x)
+        gx = jax.grad(f_xla, argnums=(0, 1))(vals, x)
+        for a, b in zip(gp, gx):
+            np.testing.assert_allclose(np.array(a), np.array(b),
+                                       rtol=1e-3, atol=1e-3)

@@ -1,0 +1,174 @@
+"""Operator layer (core/linops) vs dense references, across backends."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features, linops, modulation, walks
+from repro.graphs import generators
+from repro.kernels import dispatch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = generators.grid2d(6, 6)
+    mod = modulation.learnable(l_max=5)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    tr = walks.sample_walks(g, jax.random.PRNGKey(0), n_walkers=8,
+                            p_halt=0.2, l_max=5)
+    return g, f, tr
+
+
+BACKENDS = ["xla", "pallas-interpret"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_phi_operator(setup, backend):
+    g, f, tr = setup
+    n = g.n_nodes
+    op = linops.phi(tr, f, n)
+    phi = np.array(op.dense())
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((n, 3)).astype(np.float32)
+    v = rng.standard_normal(n).astype(np.float32)
+    with dispatch.use_backend(backend):
+        got_mv = np.array(op.matvec(jnp.asarray(u)))
+        got_rmv = np.array(op.rmatvec(jnp.asarray(v)))
+    np.testing.assert_allclose(got_mv, phi @ u, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(got_rmv, phi.T @ v, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.array(op.diag_approx()), np.diag(phi), rtol=2e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_khat_operator_square_and_cross(setup, backend):
+    g, f, tr = setup
+    n = g.n_nodes
+    rng = np.random.default_rng(1)
+    rows = jnp.asarray(rng.choice(n, 9, replace=False))
+    k_sq = linops.khat(tr, f, n)
+    k_cross = linops.khat_cross(tr, features.take_rows(tr, rows), f, n)
+    phi = np.array(linops.phi(tr, f, n).dense())
+    v = rng.standard_normal(n).astype(np.float32)
+    a = rng.standard_normal(9).astype(np.float32)
+    with dispatch.use_backend(backend):
+        got_sq = np.array(k_sq.matvec(jnp.asarray(v)))
+        got_cr = np.array(k_cross.matvec(jnp.asarray(a)))
+        got_cr_t = np.array(k_cross.rmatvec(jnp.asarray(v)))
+    np.testing.assert_allclose(got_sq, phi @ (phi.T @ v), rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        got_cr, phi @ (phi[np.asarray(rows)].T @ a), rtol=2e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        got_cr_t, phi[np.asarray(rows)] @ (phi.T @ v), rtol=2e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.array(k_sq.dense()), phi @ phi.T, rtol=2e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_shifted_operator_noise_forms(setup, backend):
+    """Scalar σ²I, per-row noise vector, and masked-sandwich forms all match
+    their dense H."""
+    g, f, tr = setup
+    n = g.n_nodes
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.standard_normal((n, 2)), jnp.float32)
+    k_dense = np.array(linops.khat(tr, f, n).dense())
+
+    scalar = jnp.asarray(0.3, jnp.float32)
+    vec = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    mask = jnp.asarray((rng.uniform(size=n) > 0.5).astype(np.float32))
+
+    cases = [
+        (linops.shifted(tr, f, scalar, n), k_dense + 0.3 * np.eye(n)),
+        (linops.shifted(tr, f, vec, n), k_dense + np.diag(np.array(vec))),
+        (
+            linops.shifted(tr, f, vec, n, mask=mask),
+            np.array(mask)[:, None] * k_dense * np.array(mask)[None, :]
+            + np.diag(np.array(vec)),
+        ),
+    ]
+    for op, dense in cases:
+        with dispatch.use_backend(backend):
+            got = np.array(op.matvec(v))
+        np.testing.assert_allclose(got, dense @ np.array(v), rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(np.array(op.dense()), dense, rtol=2e-4, atol=1e-4)
+        assert np.isfinite(np.array(op.diag_approx())).all()
+
+
+def test_operators_are_pytrees_and_jit_safe(setup):
+    g, f, tr = setup
+    n = g.n_nodes
+    op = linops.shifted(tr, f, jnp.asarray(0.1), n)
+
+    @jax.jit
+    def apply(op, v):
+        return op(v)  # operators are callable
+
+    v = jnp.ones((n,), jnp.float32)
+    got = apply(op, v)
+    np.testing.assert_allclose(np.array(got), np.array(op.matvec(v)),
+                               rtol=1e-6, atol=1e-6)
+    leaves = jax.tree_util.tree_leaves(op)
+    assert all(isinstance(x, jax.Array) for x in leaves)
+
+
+def test_reduce_hook_is_applied(setup):
+    """The injectable reduce hook sees the Φᵀv intermediate (psum stand-in)."""
+    g, f, tr = setup
+    n = g.n_nodes
+    calls = []
+
+    def fake_psum(u):
+        calls.append(u.shape)
+        return 2.0 * u
+
+    k_plain = linops.khat(tr, f, n)
+    k_hooked = linops.khat(tr, f, n, reduce=fake_psum)
+    v = jnp.ones((n,), jnp.float32)
+    np.testing.assert_allclose(
+        np.array(k_hooked.matvec(v)), 2.0 * np.array(k_plain.matvec(v)),
+        rtol=2e-4, atol=1e-4,
+    )
+    assert calls == [(n,)]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gradients_flow_through_operators(setup, backend):
+    g, f, tr = setup
+    n = g.n_nodes
+    v = jnp.ones((n,), jnp.float32)
+
+    def scalar(fvec):
+        with dispatch.use_backend(backend):
+            return jnp.sum(linops.shifted(tr, fvec, jnp.asarray(0.1), n)(v))
+
+    grad = jax.grad(scalar)(f)
+    assert np.isfinite(np.asarray(grad)).all()
+    assert np.abs(np.asarray(grad)).sum() > 0
+
+
+def test_backend_registry_resolution():
+    assert dispatch.get_backend() in dispatch.VALID_BACKENDS
+    dispatch.set_backend("xla")
+    try:
+        assert dispatch.get_backend() == "xla"
+        with dispatch.use_backend("pallas-interpret"):
+            assert dispatch.get_backend() == "pallas-interpret"
+            with dispatch.use_backend("xla"):
+                assert dispatch.get_backend() == "xla"
+            assert dispatch.get_backend() == "pallas-interpret"
+        assert dispatch.get_backend() == "xla"
+    finally:
+        dispatch.set_backend(None)
+    with pytest.raises(ValueError):
+        dispatch.set_backend("cuda")
+
+
+def test_no_pallas_global_left():
+    """The old features.set_pallas_spmv module-global is gone for good."""
+    assert not hasattr(features, "set_pallas_spmv")
+    assert not hasattr(features, "_PALLAS_SPMV")
