@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: timing discipline + the fast-mode CLI contract.
+
+One implementation of (a) the compile-warmup / block_until_ready timing loop
+and (b) the ``--full`` flag + fast-mode ``JAX_PLATFORMS=cpu`` pin, so
+``python -m benchmarks.bench_*``, ``benchmarks/run.py`` and the CI job all
+measure the same way (the PR-2 bench_spmv unification — keep it single)."""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def timeit(fn, reps: int = 1) -> float:
+    """Seconds per call after a compile/warmup invocation."""
+    import time
+
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_main(run) -> None:
+    """CLI entry shared by the bench modules (``run(fast: bool) -> rows``).
+
+    Fast mode pins JAX_PLATFORMS=cpu before the first jax computation unless
+    the caller already chose a platform — the same contract as run.py."""
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--full", action="store_true")
+    args = parser.parse_args()
+    if not args.full:
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    for row in run(fast=not args.full):
+        print(row)

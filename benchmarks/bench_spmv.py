@@ -19,12 +19,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._util import bench_main, timeit
 from repro.kernels import dispatch
 
 K_SLOTS = 64
@@ -40,12 +40,7 @@ def _payload(n: int, seed: int = 0):
 
 
 def _time(fn, reps: int) -> float:
-    jax.block_until_ready(fn())  # compile / warmup
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6  # µs
+    return timeit(fn, reps) * 1e6  # µs
 
 
 def _ops(vals, cols, v, n, backend):
@@ -97,3 +92,8 @@ def run(fast: bool = True):
         json.dump(artifact, f, indent=2, sort_keys=True)
     rows.append(dict(name="spmv_artifact", path=os.path.abspath(OUT_PATH)))
     return rows
+
+
+if __name__ == "__main__":
+    # Same invocation contract as run.py / CI — see benchmarks/_util.py.
+    bench_main(run)

@@ -1,0 +1,104 @@
+"""Bench-regression gate: fresh BENCH_*.json vs the committed baselines.
+
+Two modes, matching the two CI steps (DESIGN.md §3.6):
+
+  * ``--mode correctness`` (blocking): the fresh artifact must exist, parse,
+    carry a non-empty ``results`` table with finite positive numbers, and
+    keep every correctness-class key the baseline has (schema stability —
+    a silently dropped benchmark row is how hot paths rot).  Exit 1 on any
+    violation.
+  * ``--mode timing`` (informational, the CI step wraps it in
+    continue-on-error): per shared key print the fresh/baseline ratio and
+    exit 1 if the *median* ratio exceeds --threshold (default 2×).  The
+    median — not the max — is the gate because single-key jitter on shared
+    CI runners is noise, a uniform 2× shift is a real regression.
+
+Usage:
+  python benchmarks/check_regression.py --mode correctness \
+      --pair baseline/BENCH_spmv.json:BENCH_spmv.json \
+      --pair baseline/BENCH_walks.json:BENCH_walks.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import statistics
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def check_correctness(baseline: dict, fresh: dict, label: str) -> list[str]:
+    errors = []
+    results = fresh.get("results")
+    if not isinstance(results, dict) or not results:
+        return [f"{label}: fresh artifact has no 'results' table"]
+    for key, val in results.items():
+        if not isinstance(val, (int, float)) or not math.isfinite(val) or val <= 0:
+            errors.append(f"{label}: non-finite/non-positive timing {key}={val!r}")
+    missing = set(baseline.get("results", {})) - set(results)
+    # Keys may legitimately differ across host backends (e.g. "pallas" rows
+    # only exist on TPU baselines); only same-backend schemas must match.
+    if baseline.get("host_backend") == fresh.get("host_backend") and missing:
+        errors.append(f"{label}: benchmark rows dropped vs baseline: {sorted(missing)}")
+    return errors
+
+
+def check_timing(baseline: dict, fresh: dict, label: str, threshold: float) -> bool:
+    shared = sorted(set(baseline.get("results", {})) & set(fresh.get("results", {})))
+    ratios = []
+    for key in shared:
+        b, f = baseline["results"][key], fresh["results"][key]
+        if isinstance(b, (int, float)) and isinstance(f, (int, float)) and b > 0:
+            r = f / b
+            ratios.append(r)
+            flag = "  <-- regression" if r > threshold else ""
+            print(f"  {label}/{key}: {r:.2f}x ({b:.1f} -> {f:.1f}){flag}")
+    if not ratios:
+        print(f"  {label}: no shared timing keys (baseline from another backend?)")
+        return True
+    med = statistics.median(ratios)
+    ok = med <= threshold
+    print(f"  {label}: median ratio {med:.2f}x "
+          f"({'OK' if ok else f'REGRESSION > {threshold}x'})")
+    return ok
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--mode", choices=["correctness", "timing"], required=True)
+    parser.add_argument("--pair", action="append", required=True,
+                        metavar="BASELINE:FRESH")
+    parser.add_argument("--threshold", type=float, default=2.0)
+    args = parser.parse_args()
+
+    failed = False
+    for pair in args.pair:
+        base_path, fresh_path = pair.split(":", 1)
+        label = fresh_path
+        try:
+            baseline, fresh = _load(base_path), _load(fresh_path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"  {label}: unreadable artifact ({e})")
+            failed = True
+            continue
+        if args.mode == "correctness":
+            errors = check_correctness(baseline, fresh, label)
+            for err in errors:
+                print(err)
+            failed = failed or bool(errors)
+            if not errors:
+                print(f"  {label}: correctness OK "
+                      f"({len(fresh['results'])} rows, all finite)")
+        else:
+            failed = failed or not check_timing(baseline, fresh, label,
+                                                args.threshold)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,6 @@ from __future__ import annotations
 import json
 import os
 
-from repro.launch.hlo_analysis import HBM_BW, LINK_BW, PEAK_FLOPS
-
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
 

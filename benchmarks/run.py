@@ -10,10 +10,15 @@ Flags:
                      backend ("xla" | "pallas" | "pallas-interpret") via
                      repro.kernels.dispatch — the whole GP stack obeys it.
   --only=PREFIX      run only suites whose label starts with PREFIX
+
+Fast mode (no --full) pins JAX_PLATFORMS=cpu before jax initialises unless
+the environment already chose a platform — the same contract as the
+``python -m benchmarks.bench_*`` entry points, so CI and local runs agree.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
@@ -36,6 +41,9 @@ def main() -> None:
         if arg.startswith("--only="):
             only = arg.split("=", 1)[1]
 
+    if fast:
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
     if backend is not None:
         from repro.kernels import dispatch
 
@@ -49,11 +57,13 @@ def main() -> None:
         bench_regression,
         bench_scaling,
         bench_spmv,
+        bench_walks,
         roofline,
     )
 
     suites = [
         ("spmv (backend registry / BENCH_spmv.json)", bench_spmv),
+        ("walks (walk sampler / BENCH_walks.json)", bench_walks),
         ("scaling (Table 1 / Fig 2)", bench_scaling),
         ("ablation (Table 5)", bench_ablation),
         ("regression (Fig 3)", bench_regression),

@@ -6,7 +6,6 @@ influential user in a social network by Thompson-sampling BO with GRF-GPs.
 
 The BO state checkpoints every iteration — kill and rerun to resume."""
 import argparse
-import os
 import time
 
 import jax
@@ -51,7 +50,6 @@ def main():
     if mgr.latest_step() is not None:
         print("resuming BO from checkpoint ...")
         # BOState is plain numpy + params pytree: rebuild via example tree.
-        import jax.numpy as jnp
         example = thompson.BOState(
             x_buf=np.zeros(args.init + args.steps, np.int32),
             y_buf=np.zeros(args.init + args.steps, np.float32),

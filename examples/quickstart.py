@@ -5,7 +5,11 @@
 Builds a road-like grid graph, samples a ground-truth signal from an exact
 diffusion GP, then runs the paper's three-step workflow (kernel init via
 random walks → LML hyperparameter learning → pathwise-conditioned posterior)
-and compares against the O(N³) exact GP."""
+and compares against the O(N³) exact GP.
+
+This materialises the full [N, K] walk trace — fine up to ~10⁵ nodes.  For
+the chunked 10⁶-node path (lazy Φ, O(chunk·K) peak memory) see README.md
+"The 10⁶-node path" and `posterior.pathwise_samples_chunked`."""
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -7,7 +7,6 @@
 (the deliverable scale — a few hundred steps; expects real accelerators for
 reasonable wall-clock).  Checkpoints under --ckpt; kill + rerun to resume."""
 import argparse
-import dataclasses
 
 from repro.configs import get_config, reduce_config
 from repro.launch.train import train_loop

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 from collections import deque
-from typing import Callable
 
 import numpy as np
 

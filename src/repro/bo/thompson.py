@@ -23,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import features
+from ..core import features, walks
 from ..core.modulation import Modulation
-from ..core.walks import WalkTrace
+from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
+from ..graphs.formats import Graph
 from ..gp import mll, posterior
 
 
@@ -50,7 +51,7 @@ class BOState:
 
 
 def thompson_sampling(
-    trace: WalkTrace,
+    trace: WalkTrace | None,
     mod: Modulation,
     objective: Callable[[np.ndarray], np.ndarray],
     key: jax.Array,
@@ -63,14 +64,33 @@ def thompson_sampling(
     state: BOState | None = None,
     checkpoint_cb: Callable[[BOState], None] | None = None,
     batch_size: int = 1,
+    graph: Graph | None = None,
+    walk: WalkConfig | None = None,
+    chunk: int = DEFAULT_CHUNK,
 ) -> BOState:
     """Run Alg. 3. ``objective`` maps node ids → noisy observations.
 
     ``batch_size`` > 1 runs *batched* Thompson sampling (beyond-paper):
     q independent pathwise posterior samples per round, one argmax each —
     the natural parallel-evaluation extension for large graphs where
-    objective queries are concurrent (e.g. q profiles crawled at once)."""
-    n = trace.n_nodes
+    objective queries are concurrent (e.g. q profiles crawled at once).
+
+    Pass ``graph`` + ``walk`` (and ``trace=None``) to run the *chunked*
+    million-node path: the full-graph trace is never materialised — each
+    posterior draw streams Φ in ``chunk``-row blocks and only the
+    observation-set trace Φ_x ([capacity, K]) ever exists, so peak memory
+    is O(chunk·K) instead of O(N·K).  The counter-based walker RNG makes
+    both paths draw from the same Φ given the same key (DESIGN.md §3.6)."""
+    chunked = graph is not None
+    if chunked and walk is None:
+        raise ValueError("chunked Thompson sampling needs a WalkConfig")
+    if not chunked and trace is None:
+        raise ValueError(
+            "pass either a materialised trace or graph= (+ walk=) for the "
+            "chunked path"
+        )
+    n = graph.n_nodes if chunked else trace.n_nodes
+    walk_key = jax.random.fold_in(key, 7919)  # Φ identity, fixed across iters
     capacity = n_init + n_steps * batch_size
     key_np = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
 
@@ -97,7 +117,15 @@ def thompson_sampling(
         y_n = jnp.asarray((state.y_buf - ymean) / ystd) * mask
 
         if t % refit_every == 0:
-            trace_x = features.take_rows(trace, x_all)
+            if chunked:
+                # Φ_x rows via the counter RNG — identical to take_rows on
+                # the (never materialised) full trace.
+                trace_x = walks.sample_walks_for_nodes(
+                    graph, x_all, walk_key,
+                    walk.n_walkers, walk.p_halt, walk.l_max, walk.reweight,
+                )
+            else:
+                trace_x = features.take_rows(trace, x_all)
             res = mll.fit_hyperparams(
                 trace_x, mod, y_n, n, jax.random.fold_in(key, 1000 + t),
                 steps=refit_steps, lr=0.05, init_params=state.params,
@@ -107,10 +135,18 @@ def thompson_sampling(
 
         f = mod(state.params["mod"])
         s2 = mll.noise_var(state.params)
-        samples = posterior.pathwise_samples(
-            trace, x_all, f, s2, y_n,
-            jax.random.fold_in(key, t), n_samples=batch_size, obs_mask=mask,
-        )
+        if chunked:
+            samples = posterior.pathwise_samples_chunked(
+                graph, x_all, f, s2, y_n, jax.random.fold_in(key, t),
+                walk_key, walk, chunk=chunk, n_samples=batch_size,
+                obs_mask=mask,
+            )
+        else:
+            samples = posterior.pathwise_samples(
+                trace, x_all, f, s2, y_n,
+                jax.random.fold_in(key, t), n_samples=batch_size,
+                obs_mask=mask,
+            )
         # Mask observed nodes, pick one argmax per sample (Alg. 3 line 8).
         samples = np.array(samples)  # writable host copy
         samples[state.x_obs, :] = -np.inf

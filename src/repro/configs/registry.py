@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..models.config import LayerSpec, ModelConfig
+from ..models.config import ModelConfig
 from . import (
     deepseek_v2_236b,
     gemma2_27b,

@@ -19,8 +19,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..graphs.formats import Graph
 from ..kernels import dispatch
-from .walks import WalkTrace
+from .walks import WalkConfig, WalkTrace
 
 
 def feature_values(trace: WalkTrace, f: jax.Array) -> jax.Array:
@@ -103,6 +104,104 @@ def khat_diag_exact(trace: WalkTrace, f: jax.Array) -> jax.Array:
     vals = feature_values(trace, f)
     same = trace.cols[:, :, None] == trace.cols[:, None, :]
     return jnp.einsum("mk,ml,mkl->m", vals, vals, same.astype(vals.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Chunked products: Φ is never materialised.  Each lax.scan step re-samples a
+# `chunk`-row block of walks (counter RNG ⇒ identical to the monolithic rows)
+# and streams it straight into the product, so peak memory is O(chunk·K)
+# instead of O(N·K) — the 10⁶-node path (DESIGN.md §3.6).  `row_start` may be
+# a traced value (shard offsets under shard_map).
+# ---------------------------------------------------------------------------
+
+
+def _sample_chunk_vals(graph, f, seed, start, chunk, n_rows, cfg):
+    """Sample one block; returns (cols, vals) with padded rows zeroed."""
+    idx = jnp.arange(chunk)
+    valid = (idx < n_rows).astype(jnp.float32)
+    nodes = jnp.minimum(start + idx, graph.n_nodes - 1).astype(jnp.int32)
+    cols, loads, lens = dispatch.walk_sample(
+        graph.neighbors, graph.weights, graph.deg, nodes, seed,
+        n_walkers=cfg.n_walkers, p_halt=cfg.p_halt, l_max=cfg.l_max,
+        reweight=cfg.reweight,
+    )
+    vals = (loads * valid[:, None]).astype(f.dtype) * f[lens]
+    return cols, vals
+
+
+def phi_matvec_chunked(
+    graph: Graph, f: jax.Array, u: jax.Array, seed: jax.Array,
+    *, cfg: WalkConfig, chunk: int, row_start=0, n_rows: int | None = None,
+) -> jax.Array:
+    """y = Φ u over rows [row_start, row_start+n_rows), streamed by chunks."""
+    n_rows = graph.n_nodes if n_rows is None else n_rows
+    nc = -(-n_rows // chunk)
+    y0 = jnp.zeros((nc * chunk,) + u.shape[1:], jnp.float32)
+
+    def step(y, i):
+        cols, vals = _sample_chunk_vals(
+            graph, f, seed, row_start + i * chunk, chunk, n_rows - i * chunk,
+            cfg,
+        )
+        y_c = dispatch.phi_matvec(vals, cols, u)
+        y = jax.lax.dynamic_update_slice(
+            y, y_c, (i * chunk,) + (0,) * (y.ndim - 1)
+        )
+        return y, None
+
+    y, _ = jax.lax.scan(step, y0, jnp.arange(nc))
+    return y[:n_rows]
+
+
+def phi_t_matvec_chunked(
+    graph: Graph, f: jax.Array, v: jax.Array, seed: jax.Array,
+    *, cfg: WalkConfig, chunk: int, row_start=0, n_rows: int | None = None,
+) -> jax.Array:
+    """u = Φᵀ v for the same streamed row range; accumulates into [N(, R)]."""
+    n_rows = graph.n_nodes if n_rows is None else n_rows
+    nc = -(-n_rows // chunk)
+    pad = nc * chunk - n_rows
+    if pad:
+        v = jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+    u0 = jnp.zeros((graph.n_nodes,) + v.shape[1:], jnp.float32)
+
+    def step(u, i):
+        cols, vals = _sample_chunk_vals(
+            graph, f, seed, row_start + i * chunk, chunk, n_rows - i * chunk,
+            cfg,
+        )
+        v_c = jax.lax.dynamic_slice(
+            v, (i * chunk,) + (0,) * (v.ndim - 1),
+            (chunk,) + v.shape[1:],
+        )
+        u = u + dispatch.phi_t_matvec(vals, cols, v_c, graph.n_nodes)
+        return u, None
+
+    u, _ = jax.lax.scan(step, u0, jnp.arange(nc))
+    return u
+
+
+def khat_diag_approx_chunked(
+    graph: Graph, f: jax.Array, seed: jax.Array,
+    *, cfg: WalkConfig, chunk: int, row_start=0, n_rows: int | None = None,
+) -> jax.Array:
+    """Streamed Σ_k vals² per row — the Jacobi diagonal without the trace."""
+    n_rows = graph.n_nodes if n_rows is None else n_rows
+    nc = -(-n_rows // chunk)
+    d0 = jnp.zeros((nc * chunk,), jnp.float32)
+
+    def step(d, i):
+        _, vals = _sample_chunk_vals(
+            graph, f, seed, row_start + i * chunk, chunk, n_rows - i * chunk,
+            cfg,
+        )
+        d = jax.lax.dynamic_update_slice(
+            d, jnp.sum(vals * vals, axis=1), (i * chunk,)
+        )
+        return d, None
+
+    d, _ = jax.lax.scan(step, d0, jnp.arange(nc))
+    return d[:n_rows]
 
 
 def nnz_per_row(trace: WalkTrace) -> jax.Array:

@@ -34,9 +34,10 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..graphs.formats import Graph
 from ..kernels import dispatch
 from . import features
-from .walks import WalkTrace
+from .walks import DEFAULT_CHUNK, WalkConfig, WalkTrace, walk_seed
 
 
 def _bcast(d, v):
@@ -75,6 +76,10 @@ class PhiOperator:
         own = self.trace.cols == jnp.arange(self.shape[0])[:, None]
         return jnp.sum(jnp.where(own, self.vals(), 0.0), axis=1)
 
+    def diag_sq(self) -> jax.Array:
+        """Σ_k vals² per row — K̂'s Jacobi diagonal (see khat_diag_approx)."""
+        return features.khat_diag_approx(self.trace, self.f)
+
     def dense(self) -> jax.Array:
         return features.materialize_phi(self.trace, self.f, self.n_nodes)
 
@@ -95,17 +100,100 @@ class PhiOperator:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
+class ChunkedPhiOperator:
+    """Φ as a *lazy* linear map over a graph: no trace is ever materialised.
+
+    Each product re-samples walks in ``chunk``-row blocks and streams them
+    through the dispatched sparse products (core/features.py chunked
+    drivers), so peak memory is O(chunk·K) instead of O(N·K) — this is what
+    unlocks 10⁶-node graphs on one host (DESIGN.md §3.6).  Because the
+    walker RNG is counter-based on absolute node ids, this operator computes
+    *exactly* the same Φ as ``PhiOperator`` built from
+    ``sample_walks(graph, key, ...)`` with the same key.
+
+    ``row_start``/``n_rows`` select a row range of the full Φ (may be traced
+    — the distributed path passes per-shard offsets under shard_map).
+    Re-sampling trades compute for memory: every matvec redoes the walk
+    simulation, which is O(N·n_walkers·l_max) gathers — cheap next to the
+    CG chain it feeds, and the hot loops (training-set solves) run on small
+    materialised traces anyway.
+    """
+
+    graph: Graph
+    f: jax.Array
+    seed: jax.Array
+    cfg: WalkConfig
+    chunk: int = DEFAULT_CHUNK
+    n_rows: int | None = None
+    row_start: jax.Array | int = 0
+
+    @property
+    def n_nodes(self) -> int:
+        return self.graph.n_nodes
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        rows = self.n_nodes if self.n_rows is None else self.n_rows
+        return (rows, self.n_nodes)
+
+    def _kw(self):
+        return dict(cfg=self.cfg, chunk=self.chunk, row_start=self.row_start,
+                    n_rows=self.n_rows)
+
+    def matvec(self, u: jax.Array) -> jax.Array:
+        """y = Φ u, streamed: peak extra memory O(chunk·K)."""
+        return features.phi_matvec_chunked(
+            self.graph, self.f, u, self.seed, **self._kw()
+        )
+
+    def rmatvec(self, v: jax.Array) -> jax.Array:
+        """u = Φᵀ v, streamed scatter-accumulate into [N(, R)]."""
+        return features.phi_t_matvec_chunked(
+            self.graph, self.f, v, self.seed, **self._kw()
+        )
+
+    def diag_sq(self) -> jax.Array:
+        return features.khat_diag_approx_chunked(
+            self.graph, self.f, self.seed, **self._kw()
+        )
+
+    def dense(self) -> jax.Array:
+        raise NotImplementedError(
+            "ChunkedPhiOperator is lazy by design (the dense Φ is the O(N·K) "
+            "materialisation it exists to avoid); for small problems sample a "
+            "trace with the same key and use PhiOperator.dense()."
+        )
+
+    __call__ = matvec
+
+    def tree_flatten(self):
+        return (self.graph, self.f, self.seed, self.row_start), (
+            self.cfg, self.chunk, self.n_rows,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        graph, f, seed, row_start = children
+        cfg, chunk, n_rows = aux
+        return cls(graph, f, seed, cfg, chunk, n_rows, row_start)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
 class KhatOperator:
     """K̂ = Φ_rows Φ_colsᵀ — square (rows is cols) or cross-covariance.
 
     ``reduce`` (optional) is applied to the intermediate u = Φ_colsᵀ v; under
     shard_map inject ``lambda u: jax.lax.psum(u, axes)`` to make this the
-    row-sharded distributed matvec.  When no reduce hook is set, Pallas
-    backends run the fused kernel (u never leaves VMEM).
+    row-sharded distributed matvec.  When no reduce hook is set and both
+    operands carry materialised traces, Pallas backends run the fused kernel
+    (u never leaves VMEM); with a :class:`ChunkedPhiOperator` on either side
+    the product runs as the composed lazy chain instead (peak memory
+    O(chunk·K) + one N-vector).
     """
 
-    rows: PhiOperator
-    cols: PhiOperator
+    rows: "PhiOperator | ChunkedPhiOperator"
+    cols: "PhiOperator | ChunkedPhiOperator"
     reduce: Callable[[jax.Array], jax.Array] | None = None
 
     @property
@@ -117,13 +205,19 @@ class KhatOperator:
         return (self.rows.shape[0], self.cols.shape[0])
 
     def matvec(self, v: jax.Array) -> jax.Array:
-        if self.reduce is None:
+        fusable = isinstance(self.rows, PhiOperator) and isinstance(
+            self.cols, PhiOperator
+        )
+        if self.reduce is None and fusable:
             return dispatch.khat_matvec(
                 self.rows.vals(), self.rows.trace.cols,
                 self.cols.vals(), self.cols.trace.cols,
                 v, self.n_nodes,
             )
-        return self.rows.matvec(self.reduce(self.cols.rmatvec(v)))
+        u = self.cols.rmatvec(v)
+        if self.reduce is not None:
+            u = self.reduce(u)
+        return self.rows.matvec(u)
 
     def rmatvec(self, v: jax.Array) -> jax.Array:
         return self.transpose().matvec(v)
@@ -135,7 +229,7 @@ class KhatOperator:
         """Jacobi-preconditioner diagonal: Σ_k vals² of the row features.
 
         Local per-shard rows under shard_map — no collective needed."""
-        return features.khat_diag_approx(self.rows.trace, self.rows.f)
+        return self.rows.diag_sq()
 
     def dense(self) -> jax.Array:
         return self.rows.dense() @ self.cols.dense().T
@@ -244,3 +338,52 @@ def shifted(
 ) -> ShiftedOperator:
     """H = K̂ + D from a walk trace — the GP solve operator in one call."""
     return ShiftedOperator(khat(trace, f, n_nodes, reduce), noise, mask)
+
+
+def chunked_phi(
+    graph: Graph,
+    f: jax.Array,
+    key: jax.Array,
+    cfg: WalkConfig,
+    chunk: int = DEFAULT_CHUNK,
+    n_rows: int | None = None,
+    row_start: jax.Array | int = 0,
+) -> ChunkedPhiOperator:
+    """Lazy Φ over ``graph``; same rows as ``sample_walks(graph, key, ...)``."""
+    return ChunkedPhiOperator(
+        graph, f, walk_seed(key), cfg, chunk, n_rows, row_start
+    )
+
+
+def chunked_khat(
+    graph: Graph,
+    f: jax.Array,
+    key: jax.Array,
+    cfg: WalkConfig,
+    chunk: int = DEFAULT_CHUNK,
+    reduce: Callable | None = None,
+) -> KhatOperator:
+    """Square K̂ = ΦΦᵀ with both factors lazy/chunked (peak O(chunk·K))."""
+    p = chunked_phi(graph, f, key, cfg, chunk)
+    return KhatOperator(p, p, reduce)
+
+
+def chunked_khat_cross(
+    graph: Graph,
+    trace_cols: WalkTrace,
+    f: jax.Array,
+    key: jax.Array,
+    cfg: WalkConfig,
+    chunk: int = DEFAULT_CHUNK,
+    reduce: Callable | None = None,
+) -> KhatOperator:
+    """K̂[·, cols] = Φ_full Φ_colsᵀ with the full-graph factor lazy (Eq. 12).
+
+    ``trace_cols`` is the small materialised trace (e.g. training nodes,
+    sampled via ``sample_walks_for_nodes`` with the *same key* so its rows
+    agree with the lazy Φ)."""
+    return KhatOperator(
+        chunked_phi(graph, f, key, cfg, chunk),
+        PhiOperator(trace_cols, f, graph.n_nodes),
+        reduce,
+    )

@@ -1,13 +1,22 @@
-"""Vectorised GRF random-walk sampling (paper Alg. 1/2, TPU-adapted).
+"""GRF random-walk sampling (paper Alg. 1/2) — backend-dispatched + chunked.
 
-Alg. 2's data-dependent ``while`` loop is replaced by a fixed-length masked
-``lax.scan``: a halted walker keeps moving but its deposits are masked to
-zero.  The deposit distribution is identical (masking == rejection at the
-deposit stage) and every shape is static, which makes the sampler jit-able,
-vmap-able and shard_map-able (DESIGN.md §3).
+Alg. 2's data-dependent ``while`` loop is replaced by fixed-length masked
+stepping: a halted walker keeps moving but its deposits are masked to zero.
+The deposit distribution is identical (masking == rejection at the deposit
+stage) and every shape is static, which makes the sampler jit-able,
+vmap-able and shard_map-able (DESIGN.md §3.6).
+
+Sampling itself is dispatched through repro.kernels.dispatch ("xla" |
+"pallas" | "pallas-interpret"): the jnp oracle and the Pallas walker kernel
+share a counter-based RNG keyed on (seed, absolute start node, walker,
+step), so the trace for a node block is *independent of how the blocks are
+cut*.  That invariance is what the chunked drivers below — and the chunked
+operators in core/linops.py — are built on: sampling N nodes monolithically,
+in 65536-row chunks, or shard-by-shard yields the same rows (walk structure
+bit-exact; loads to FMA-contraction ulps across compilations).
 
 The output is a :class:`WalkTrace` — a *structure-only* ELL representation
-``(cols, loads, lens)``.  Feature values are ``loads * f[lens] / n`` for a
+``(cols, loads, lens)``.  Feature values are ``loads * f[lens]`` for a
 modulation vector ``f``; keeping ``f`` out of the trace makes the kernel
 hyperparameters differentiable without re-simulating walks.
 """
@@ -15,17 +24,21 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 
 from ..graphs.formats import Graph
+from ..kernels import dispatch
+
+DEFAULT_CHUNK = 65536
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class WalkTrace:
-    """ELL-format walk deposits for all N nodes.
+    """ELL-format walk deposits for a block of nodes.
 
     K = n_walkers * (l_max + 1) deposit slots per node.
 
@@ -56,51 +69,44 @@ class WalkTrace:
         return cls(*children)
 
 
-def _walk_one(
-    key: jax.Array,
-    start: jax.Array,
-    neighbors: jax.Array,
-    weights: jax.Array,
-    deg: jax.Array,
-    p_halt: float,
-    l_max: int,
-    reweight: bool = True,
-):
-    """Simulate one walker; returns per-step (col, load, alive).
+@dataclasses.dataclass(frozen=True)
+class WalkConfig:
+    """Hashable walk-sampling hyperparameters (static under jit).
 
-    ``reweight=False`` drops the importance-sampling factor d/(1−p_halt)
-    (the paper's 'ad-hoc' ablation kernel, Eq. 13/16).
-    """
+    Bundles what every sampling call needs so the chunked operators and the
+    distributed shard path can carry one value instead of four."""
 
-    def step(carry, key_l):
-        cur, load, alive = carry
-        # Deposit happens with the *current* state (before moving).
-        out = (cur, load * alive)
-        k_choice, k_halt = jax.random.split(key_l)
-        d = deg[cur]
-        # Guard isolated nodes: degree 0 ⇒ stay put with zero load.
-        choice = jnp.minimum(
-            (jax.random.uniform(k_choice) * d).astype(jnp.int32),
-            jnp.maximum(d - 1, 0),
+    n_walkers: int
+    p_halt: float = 0.1
+    l_max: int = 10
+    reweight: bool = True
+
+    @property
+    def slots(self) -> int:
+        return self.n_walkers * (self.l_max + 1)
+
+
+def walk_seed(key: jax.Array) -> jax.Array:
+    """Derive the uint32 counter-RNG seed from a PRNG key.
+
+    Every API that samples walks derives its seed through this function, so
+    passing the same key to ``sample_walks``, ``sample_walks_for_nodes`` or
+    a chunked operator yields rows of the *same* underlying Φ."""
+    return jax.random.bits(key, (), jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "spmv_backend"))
+def _sample(graph: Graph, nodes: jax.Array, seed: jax.Array,
+            *, cfg: WalkConfig, spmv_backend: str) -> WalkTrace:
+    with dispatch.use_backend(spmv_backend):
+        cols, loads, lens = dispatch.walk_sample(
+            graph.neighbors, graph.weights, graph.deg, nodes, seed,
+            n_walkers=cfg.n_walkers, p_halt=cfg.p_halt, l_max=cfg.l_max,
+            reweight=cfg.reweight,
         )
-        nxt = neighbors[cur, choice]
-        w = weights[cur, choice]
-        if reweight:
-            new_load = load * d.astype(load.dtype) / (1.0 - p_halt) * w
-        else:
-            new_load = load * w
-        halted = jax.random.uniform(k_halt) < p_halt
-        new_alive = alive * (1.0 - halted.astype(load.dtype))
-        new_alive = new_alive * (d > 0).astype(load.dtype)
-        return (nxt, new_load, new_alive), out
-
-    keys = jax.random.split(key, l_max + 1)
-    init = (start, jnp.asarray(1.0, jnp.float32), jnp.asarray(1.0, jnp.float32))
-    _, (cols, loads) = jax.lax.scan(step, init, keys)
-    return cols, loads
+    return WalkTrace(cols=cols, loads=loads, lens=lens)
 
 
-@partial(jax.jit, static_argnames=("n_walkers", "p_halt", "l_max", "reweight"))
 def sample_walks(
     graph: Graph,
     key: jax.Array,
@@ -113,29 +119,10 @@ def sample_walks(
 
     Returns a :class:`WalkTrace` with K = n_walkers*(l_max+1) slots per node.
     """
-    n = graph.n_nodes
-    keys = jax.random.split(key, n * n_walkers).reshape(n, n_walkers, 2)
-    starts = jnp.broadcast_to(jnp.arange(n)[:, None], (n, n_walkers))
-
-    walk = partial(
-        _walk_one,
-        neighbors=graph.neighbors,
-        weights=graph.weights,
-        deg=graph.deg,
-        p_halt=p_halt,
-        l_max=l_max,
-        reweight=reweight,
-    )
-    cols, loads = jax.vmap(jax.vmap(walk))(keys, starts)  # [N, n, L+1]
-    lens = jnp.broadcast_to(
-        jnp.arange(l_max + 1, dtype=jnp.int32), (n, n_walkers, l_max + 1)
-    )
-    k = n_walkers * (l_max + 1)
-    return WalkTrace(
-        cols=cols.reshape(n, k).astype(jnp.int32),
-        loads=(loads / n_walkers).reshape(n, k),
-        lens=lens.reshape(n, k),
-    )
+    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight)
+    nodes = jnp.arange(graph.n_nodes, dtype=jnp.int32)
+    return _sample(graph, nodes, walk_seed(key), cfg=cfg,
+                   spmv_backend=dispatch.get_backend())
 
 
 def sample_walks_for_nodes(
@@ -147,26 +134,31 @@ def sample_walks_for_nodes(
     l_max: int = 10,
     reweight: bool = True,
 ) -> WalkTrace:
-    """Sample walks only from ``nodes`` (subset features, §3.1 remark)."""
-    m = nodes.shape[0]
-    keys = jax.random.split(key, m * n_walkers).reshape(m, n_walkers, 2)
-    starts = jnp.broadcast_to(nodes[:, None], (m, n_walkers))
-    walk = partial(
-        _walk_one,
-        neighbors=graph.neighbors,
-        weights=graph.weights,
-        deg=graph.deg,
-        p_halt=p_halt,
-        l_max=l_max,
-        reweight=reweight,
-    )
-    cols, loads = jax.vmap(jax.vmap(walk))(keys, starts)
-    lens = jnp.broadcast_to(
-        jnp.arange(l_max + 1, dtype=jnp.int32), (m, n_walkers, l_max + 1)
-    )
-    k = n_walkers * (l_max + 1)
-    return WalkTrace(
-        cols=cols.reshape(m, k).astype(jnp.int32),
-        loads=(loads / n_walkers).reshape(m, k),
-        lens=lens.reshape(m, k),
-    )
+    """Sample walks only from ``nodes`` (subset features, §3.1 remark).
+
+    With the counter RNG the returned rows equal the corresponding rows of
+    ``sample_walks(graph, key, ...)`` exactly — subset traces are consistent
+    with the full Φ without materialising it."""
+    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight)
+    return _sample(graph, nodes.astype(jnp.int32), walk_seed(key), cfg=cfg,
+                   spmv_backend=dispatch.get_backend())
+
+
+def walk_chunks(
+    graph: Graph,
+    key: jax.Array,
+    cfg: WalkConfig,
+    chunk: int = DEFAULT_CHUNK,
+) -> Iterator[tuple[int, WalkTrace]]:
+    """Stream (row_start, WalkTrace) over node blocks of ``chunk`` rows.
+
+    Peak memory is O(chunk · K) instead of O(N · K); concatenating every
+    yielded trace reproduces ``sample_walks`` bit-for-bit.  This is the
+    host-level view of the chunked path — the in-jit streaming consumers
+    live in core/features.py / core/linops.py."""
+    n = graph.n_nodes
+    seed = walk_seed(key)
+    backend = dispatch.get_backend()
+    for start in range(0, n, chunk):
+        nodes = jnp.arange(start, min(start + chunk, n), dtype=jnp.int32)
+        yield start, _sample(graph, nodes, seed, cfg=cfg, spmv_backend=backend)

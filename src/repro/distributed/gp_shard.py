@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core import linops
-from ..core.walks import WalkTrace
+from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace, walk_seed
+from ..graphs.formats import Graph
 from ..gp.cg import cg_solve, cg_solve_fixed
 
 # jax.shard_map with replication checks off, across the API move:
@@ -135,6 +136,66 @@ def sharded_cg_solve(
         return res.x
 
     return run(trace.cols, trace.loads, trace.lens, f, b)
+
+
+def sharded_cg_solve_chunked(
+    graph: Graph,
+    f: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    key: jax.Array,
+    walk: WalkConfig,
+    chunk: int = DEFAULT_CHUNK,
+    sigma_n2: float = 0.1,
+    tol: float = 1e-5,
+    max_iters: int = 256,
+):
+    """Solve (K̂ + σ²I) v = b with *chunk-per-shard lazy* Φ rows (§3.6).
+
+    Composition of the two scaling axes: each device owns an N/n_shards row
+    range of Φ which it never materialises — its ChunkedPhiOperator streams
+    ``chunk``-row walk blocks per matvec — and the cross-device reduction is
+    the same single psum hook KhatOperator always takes.  Per-device peak
+    memory is O(chunk·K) regardless of graph size; the adjacency replicates
+    (walkers cross shard boundaries).  Equals ``sharded_cg_solve`` on the
+    materialised trace sampled with the same key."""
+    axes = _data_axes(mesh)
+    n_nodes = graph.n_nodes
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    if n_nodes % n_shards:
+        raise ValueError(f"n_nodes={n_nodes} not divisible by {n_shards} shards")
+    n_local = n_nodes // n_shards
+    seed = walk_seed(key)
+    row = P(axes)
+
+    @functools.partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), row),
+        out_specs=row,
+    )
+    def run(neighbors, weights, deg, f, seed, b_local):
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        phi_local = linops.ChunkedPhiOperator(
+            Graph(neighbors, weights, deg), f, seed, walk, chunk,
+            n_rows=n_local, row_start=idx * n_local,
+        )
+        khat = linops.KhatOperator(phi_local, phi_local,
+                                   reduce=psum_reduce(axes))
+        h = linops.ShiftedOperator(khat, jnp.asarray(sigma_n2, jnp.float32))
+
+        def dot(u, v):
+            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
+
+        res = cg_solve(h, b_local, tol=tol, max_iters=max_iters,
+                       precond_diag=h.diag_approx(), dot=dot)
+        return res.x
+
+    return run(graph.neighbors, graph.weights, graph.deg, f, seed, b)
 
 
 def sharded_posterior_sample(

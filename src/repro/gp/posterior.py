@@ -11,8 +11,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core import features, linops
-from ..core.walks import WalkTrace
+from ..core import features, linops, walks
+from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
+from ..graphs.formats import Graph
 from ..kernels import dispatch
 from .cg import cg_solve
 from .mll import make_h_operator
@@ -118,6 +119,75 @@ def _pathwise_samples_impl(
     u = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
                  precond_diag=h.diag_approx()).x
     return g + linops.khat_cross(trace, trace_x, f, n).matvec(u)
+
+
+def pathwise_samples_chunked(
+    graph: Graph,
+    train_nodes: jax.Array,
+    f: jax.Array,
+    sigma_n2: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    walk_key: jax.Array,
+    cfg: WalkConfig,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    n_samples: int = 16,
+    cg_tol: float = 1e-5,
+    cg_iters: int = 512,
+    obs_mask: jax.Array | None = None,
+) -> jax.Array:
+    """Eq. 12 over all N nodes with the full-graph Φ *never materialised*.
+
+    The prior draw g = Φw and the cross correction K̂_{·x}u stream Φ in
+    ``chunk``-row blocks (core/linops.ChunkedPhiOperator); only the
+    training-node trace Φ_x is materialised ([T, K]).  Because the walker
+    RNG is counter-based, ``walk_key`` makes Φ_x and the streamed Φ rows of
+    the same underlying feature matrix — this path equals
+    ``pathwise_samples`` on the monolithic trace sampled with ``walk_key``.
+    Peak memory: O(chunk·K + N·n_samples) instead of O(N·K)."""
+    return _pathwise_samples_chunked(
+        graph, train_nodes, f, sigma_n2, y, key, walk_key, cg_tol, obs_mask,
+        cfg=cfg, chunk=chunk, n_samples=n_samples, cg_iters=cg_iters,
+        spmv_backend=dispatch.get_backend(),
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "chunk", "n_samples", "cg_iters", "spmv_backend"),
+)
+def _pathwise_samples_chunked(
+    graph, train_nodes, f, sigma_n2, y, key, walk_key, cg_tol, obs_mask,
+    *, cfg, chunk, n_samples, cg_iters, spmv_backend,
+):
+    with dispatch.use_backend(spmv_backend):
+        n = graph.n_nodes
+        t = train_nodes.shape[0]
+        noise = (
+            sigma_n2 if obs_mask is None
+            else jnp.where(obs_mask > 0, sigma_n2, 1e6)
+        )
+        k_w, k_eps = jax.random.split(key)
+        w = jax.random.normal(k_w, (n, n_samples), dtype=jnp.float32)
+        phi_full = linops.chunked_phi(graph, f, walk_key, cfg, chunk)
+        g = phi_full.matvec(w)                                 # prior sample
+        g_x = g[train_nodes]
+        eps = jnp.sqrt(sigma_n2) * jax.random.normal(k_eps, (t, n_samples))
+        resid = y[:, None] - (g_x + eps)
+        if obs_mask is not None:
+            resid = resid * obs_mask[:, None]
+
+        trace_x = walks.sample_walks_for_nodes(
+            graph, train_nodes, walk_key,
+            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
+        )
+        h = make_h_operator(trace_x, f, noise, n)
+        u = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
+                     precond_diag=h.diag_approx()).x
+        cross = linops.chunked_khat_cross(graph, trace_x, f, walk_key, cfg,
+                                          chunk)
+        return g + cross.matvec(u)
 
 
 def predictive_moments_from_samples(samples: jax.Array):

@@ -6,9 +6,6 @@ Kernel blocks are assembled from sparse GRF features (K_uu, K_xu are small:
 M×M and T×M), so the per-step cost stays O((T+M)·K·M)."""
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -2,3 +2,4 @@
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
 from . import dispatch  # noqa: F401  (backend registry — DESIGN.md §3.4)
+from . import walk_sampler  # noqa: F401  (walk-sampling kernel — DESIGN.md §3.6)

@@ -10,9 +10,10 @@ instead of hard-coding an implementation at the call site.  Three backends:
                            (CPU-testable bit-accurate stand-in for "pallas").
 
 Resolution order: active :func:`use_backend` context > :func:`set_backend`
-global > auto (``"pallas"`` on TPU, ``"xla"`` elsewhere).  Backend selection
-happens at Python trace time, so switching backends retraces but adds zero
-per-call overhead inside jit.
+global > ``REPRO_SPMV_BACKEND`` env var (how the CI backend matrix pins the
+whole suite to one backend) > auto (``"pallas"`` on TPU, ``"xla"``
+elsewhere).  Backend selection happens at Python trace time, so switching
+backends retraces but adds zero per-call overhead inside jit.
 
 The Pallas paths are wrapped in ``jax.custom_vjp`` (all three products are
 linear in both ``vals`` and the dense operand), so hyperparameter gradients
@@ -21,6 +22,7 @@ flow through the kernels — the XLA backend is never silently required.
 from __future__ import annotations
 
 import contextlib
+import os
 from contextvars import ContextVar
 
 import jax
@@ -44,12 +46,15 @@ def auto_backend() -> str:
 
 
 def get_backend() -> str:
-    """Resolve the active backend (context override > global > auto)."""
+    """Resolve the active backend (context > global > env var > auto)."""
     ov = _override.get()
     if ov is not None:
         return ov
     if _global_backend is not None:
         return _global_backend
+    env = os.environ.get("REPRO_SPMV_BACKEND")
+    if env:
+        return _check(env)
     return auto_backend()
 
 
@@ -118,6 +123,32 @@ def khat_matvec(
         return ops.spmv_xla(vals_rows, cols_rows, u)
     return ops.khat_pallas(
         vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes,
+        interpret=_interpret(backend),
+    )
+
+
+def walk_sample(
+    neighbors, weights, deg, nodes, seed,
+    *, n_walkers: int, p_halt: float, l_max: int, reweight: bool = True,
+    backend: str | None = None,
+):
+    """(cols, loads, lens) = GRF walk deposits for ``nodes`` in ELL layout.
+
+    The counter-based RNG (kernels/walk_sampler/rng.py) is keyed on the
+    absolute start-node id, so the result is independent of how ``nodes``
+    is chunked across calls — the contract the chunked drivers in
+    core/walks.py and core/features.py rely on."""
+    backend = _check(backend) if backend is not None else get_backend()
+    from .walk_sampler import ops
+
+    if backend == "xla":
+        return ops.walk_sample_xla(
+            neighbors, weights, deg, nodes, seed,
+            n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
+        )
+    return ops.walk_sample_pallas(
+        neighbors, weights, deg, nodes, seed,
+        n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
         interpret=_interpret(backend),
     )
 

@@ -1,0 +1,3 @@
+from .ref import walk_block, walk_sample_ref  # noqa: F401
+from .rng import counter_bits, counter_uniform, fmix32  # noqa: F401
+from .walk_sampler import walk_sample  # noqa: F401

@@ -1,0 +1,87 @@
+"""jnp oracle for the walk-sampler kernel family.
+
+Defines the semantics the Pallas kernel must reproduce and doubles as the
+``"xla"`` backend path in kernels/dispatch.py.  The per-step math lives in
+:func:`walk_block` — plain jnp on plain arrays — and the Pallas kernel calls
+the *same* function on its VMEM-resident blocks, so kernel and oracle are
+bit-identical by construction (the RNG is the counter hash in rng.py, keyed
+on absolute start-node id — see DESIGN.md §3.6).
+
+Semantics (paper Alg. 2, TPU-adapted as in core/walks.py): each of
+``n_walkers`` walkers per start node takes ``l_max`` moves; at step l it
+deposits (current node, load·alive, l) into ELL slot w·(l_max+1)+l; halting
+is geometric with probability ``p_halt`` per step, and a halted walker keeps
+moving with its deposits masked to zero (masking == rejection at the deposit
+stage).  ``reweight`` applies the importance weight d/(1−p_halt) per move.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import rng
+
+
+def walk_block(
+    neighbors: jnp.ndarray,   # int32[N, D] padded adjacency
+    weights: jnp.ndarray,     # float32[N, D] walk-matrix entries
+    deg: jnp.ndarray,         # int32[N]
+    nodes: jnp.ndarray,       # int32[M] absolute start-node ids
+    seed: jnp.ndarray,        # uint32 scalar
+    *,
+    n_walkers: int,
+    p_halt: float,
+    l_max: int,
+    reweight: bool = True,
+):
+    """Sample walks for a block of start nodes; returns (cols, loads, lens).
+
+    Outputs are [M, K] with K = n_walkers·(l_max+1); loads are already
+    divided by n_walkers (the estimator's 1/n).  Pure jnp — the Pallas
+    kernel runs this exact function per VMEM block.
+    """
+    m = nodes.shape[0]
+    max_deg = neighbors.shape[1]
+    nbr_flat = neighbors.reshape(-1)
+    wgt_flat = weights.reshape(-1)
+
+    node_u = nodes.astype(jnp.uint32)[:, None]              # [M, 1]
+    walker_u = jnp.arange(n_walkers, dtype=jnp.uint32)[None, :]
+
+    cur = jnp.broadcast_to(nodes[:, None], (m, n_walkers)).astype(jnp.int32)
+    load = jnp.ones((m, n_walkers), jnp.float32)
+    alive = jnp.ones((m, n_walkers), jnp.float32)
+
+    cols_steps, loads_steps = [], []
+    for step in range(l_max + 1):
+        cols_steps.append(cur)
+        loads_steps.append(load * alive)
+        u_choice = rng.counter_uniform(seed, node_u, walker_u, 2 * step)
+        u_halt = rng.counter_uniform(seed, node_u, walker_u, 2 * step + 1)
+        d = jnp.take(deg, cur)                              # [M, W]
+        # Guard isolated nodes: degree 0 ⇒ stay on padding with zero load.
+        choice = jnp.minimum(
+            (u_choice * d.astype(jnp.float32)).astype(jnp.int32),
+            jnp.maximum(d - 1, 0),
+        )
+        flat = cur * max_deg + choice
+        nxt = jnp.take(nbr_flat, flat)
+        w = jnp.take(wgt_flat, flat)
+        if reweight:
+            load = load * d.astype(jnp.float32) / (1.0 - p_halt) * w
+        else:
+            load = load * w
+        alive = alive * (u_halt >= p_halt).astype(jnp.float32)
+        alive = alive * (d > 0).astype(jnp.float32)
+        cur = nxt
+
+    k = n_walkers * (l_max + 1)
+    cols = jnp.stack(cols_steps, axis=-1).reshape(m, k).astype(jnp.int32)
+    loads = (jnp.stack(loads_steps, axis=-1) / n_walkers).reshape(m, k)
+    lens = jnp.broadcast_to(
+        jnp.arange(l_max + 1, dtype=jnp.int32), (m, n_walkers, l_max + 1)
+    ).reshape(m, k)
+    return cols, loads, lens
+
+
+# The oracle is the whole problem as one block.
+walk_sample_ref = walk_block

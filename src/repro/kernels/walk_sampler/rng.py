@@ -1,0 +1,61 @@
+"""Counter-based RNG shared by the walk-sampler kernel and its oracle.
+
+The sampler needs a random stream addressed by the *logical* coordinate of
+each draw — (seed, start node, walker, step, salt) — rather than by a
+stateful key that is split as the computation is laid out.  Two reasons
+(DESIGN.md §3.6):
+
+  * Chunked == monolithic: a node's walks depend only on its absolute node
+    id, so sampling nodes [0, N) in one shot or in 65536-row chunks yields
+    bit-identical WalkTraces, and Φ-row subsets (training nodes, shards)
+    are consistent with the full Φ by construction.
+  * Kernel == oracle: the hash is plain uint32 arithmetic, so the Pallas
+    kernel and the jnp oracle draw identical uniforms and produce identical
+    walk *structure* (cols/lens bit-exact; the float load chains match to
+    FMA-contraction ulps across compilations).
+
+The generator is a murmur3-style chain: each coordinate word is folded in
+with a distinct odd multiplier and the fmix32 finalizer (a bijection on
+uint32, the avalanche core of murmur3/splitmix).  This is not crypto — it
+is a decorrelation hash with good equidistribution for Monte-Carlo use,
+the same trade Philox/Threefry-lite samplers make.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_GOLDEN = 0x9E3779B9
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_M3 = 0x27D4EB2F
+
+_INV_2_24 = float(2.0**-24)
+
+
+def _u32(x) -> jnp.ndarray:
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer — bijective avalanche mix on uint32."""
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(_M1)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(_M2)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def counter_bits(seed, node, walker, ctr) -> jnp.ndarray:
+    """uint32 hash of the draw coordinate (broadcasts over array args)."""
+    h = _u32(seed) ^ jnp.uint32(_GOLDEN)
+    h = fmix32(h ^ (_u32(node) * jnp.uint32(_M1)))
+    h = fmix32(h ^ (_u32(walker) * jnp.uint32(_M2)))
+    h = fmix32(h ^ (_u32(ctr) * jnp.uint32(_M3)))
+    return h
+
+
+def counter_uniform(seed, node, walker, ctr) -> jnp.ndarray:
+    """f32 uniform in [0, 1) from the top 24 bits of the counter hash."""
+    bits = counter_bits(seed, node, walker, ctr)
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(_INV_2_24)

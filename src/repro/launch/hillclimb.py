@@ -11,7 +11,6 @@ record the corrected roofline next to (not over) the baseline artifact.
 import argparse
 import dataclasses
 import json
-import time
 
 from ..configs import get_config
 from .dryrun import ARTIFACT_DIR, run_cell, run_gp_cell

@@ -6,7 +6,6 @@ precomputed frame embeddings, llama-vision gets patch embeddings."""
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

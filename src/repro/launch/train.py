@@ -12,8 +12,6 @@ from the latest checkpoint, deterministic data cursor, async checkpoint every
 (tests/test_checkpoint.py simulates exactly that)."""
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -14,7 +14,6 @@ Public entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

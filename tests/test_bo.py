@@ -1,7 +1,6 @@
 """Bayesian optimisation: Thompson sampling beats search baselines;
 BO state survives preemption."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -13,7 +13,8 @@ from repro.graphs import generators
 from repro.core import walks, features, modulation
 from repro.gp.cg import cg_solve
 from repro.gp.mll import make_h_matvec
-from repro.distributed.gp_shard import sharded_cg_solve, sharded_posterior_sample
+from repro.distributed.gp_shard import (
+    sharded_cg_solve, sharded_cg_solve_chunked, sharded_posterior_sample)
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 g = generators.ring(64, k=2)
@@ -33,6 +34,14 @@ got_fx = sharded_cg_solve(tr, f, b, mesh, sigma_n2=0.1, max_iters=64,
                           fixed_unrolled=True)
 err = float(jnp.abs(want - got_fx).max())
 assert err < 1e-2, f"fixed cg mismatch {err}"
+
+# 1b) chunk-per-shard lazy rows == the same solve (walk key matches tr's)
+got_ck = sharded_cg_solve_chunked(
+    g, f, b, mesh, jax.random.PRNGKey(0),
+    walks.WalkConfig(n_walkers=10, p_halt=0.2, l_max=4), chunk=8,
+    sigma_n2=0.1, tol=1e-7, max_iters=300)
+err = float(jnp.abs(want - got_ck).max())
+assert err < 1e-3, f"chunked cg mismatch {err}"
 
 # 2) sharded pathwise sample: finite + correct shape + respects the mask
 mask = jnp.zeros(64).at[:16].set(1.0)

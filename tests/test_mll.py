@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import features, modulation, walks
 from repro.gp import exact, mll
-from repro.graphs import generators, signals
+from repro.graphs import generators
 
 
 @pytest.fixture(scope="module")

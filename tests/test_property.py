@@ -9,7 +9,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import features, modulation, walks
+from repro.core import modulation, walks
 from repro.gp.cg import cg_solve
 from repro.graphs import generators
 from repro.kernels.ell_spmv import ell_spmv_ref

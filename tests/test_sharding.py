@@ -5,8 +5,6 @@ the same machinery end-to-end on an 8-device mesh in a subprocess."""
 import subprocess
 import sys
 
-import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.sharding import batch_spec, param_spec
