@@ -14,6 +14,15 @@ import jax
 
 def timeit(fn, reps: int = 1) -> float:
     """Seconds per call after a compile/warmup invocation."""
+    return timeit_result(fn, reps)[0]
+
+
+def timeit_result(fn, reps: int = 1):
+    """(seconds per call, last call's result) — same discipline as timeit.
+
+    For benches that must also *read* the timed call's output (e.g. the CG
+    iters_used/converged diagnostics) without paying an extra run of a
+    multi-second workload."""
     import time
 
     jax.block_until_ready(fn())
@@ -21,7 +30,7 @@ def timeit(fn, reps: int = 1) -> float:
     for _ in range(reps):
         out = fn()
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    return (time.perf_counter() - t0) / reps, out
 
 
 def bench_main(run) -> None:

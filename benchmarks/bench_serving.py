@@ -1,0 +1,187 @@
+"""Online GP serving benchmark (DESIGN.md §3.7) → ``BENCH_serving.json``.
+
+The acceptance numbers for the serving engine at N ∈ {1e4, 1e5, 1e6}:
+
+  * ``observe``        latency of one incremental Cholesky row-append
+                       (O(m²): lazy walk row + cross-Gram + triangular
+                       solves — nothing N-scale);
+  * ``query_batch``    latency of one batched closed-form mean/variance
+                       wave for Q nodes (the gram_block hot path), with the
+                       derived sustained queries/sec in the row payload;
+  * ``refit_query``    the *from-scratch equivalent*: a fresh CG solve on
+                       the observation system plus the chunked K̂_{·x}
+                       posterior-mean pass over all N nodes — what every
+                       query cost before the serving state existed.  The
+                       row records the CG diagnostics (iters_used,
+                       converged) so silent non-convergence can't flatter
+                       the baseline;
+  * ``bo_step_incremental`` / ``bo_step_refit``  one Thompson-BO step each
+                       way: joint candidate draw + observe vs an N-long
+                       pathwise sample.
+
+The speedup ratios (refit/serving — the ≥10× acceptance criterion at 1e6)
+ride in the row payloads and the top-level ``speedups`` table, outside
+``results`` so the CI timing gate only ever compares like-for-like
+wall-clocks.
+"""
+from __future__ import annotations
+
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import bench_main, timeit, timeit_result
+from repro import serving
+from repro.core import linops, modulation, walks
+from repro.gp import cg, mll, posterior
+from repro.graphs import generators
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+CHUNK = 65536
+N_OBS = 64                    # streamed observations per size
+CAPACITY = 128
+Q_BATCH = 256                 # nodes per serving query wave
+N_CAND = 512                  # Thompson candidate set (incremental BO step)
+CG_ITERS = 64
+
+
+def _time(fn, reps: int = 1) -> float:
+    return timeit(fn, reps) * 1e3  # ms
+
+
+@partial(jax.jit, static_argnames=("cfg", "chunk", "cg_iters"))
+def _refit_posterior_mean(graph, obs, f, sigma_n2, y, walk_key,
+                          *, cfg, chunk, cg_iters):
+    """The pre-serving query path: fresh CG fit + chunked K̂_{·x} over all N.
+
+    Returns (mean[N], iters_used, converged) — the CG diagnostics feed the
+    bench rows (gp/cg.CGResult.converged)."""
+    trace_x = walks.sample_walks_for_nodes(
+        graph, obs, walk_key, cfg.n_walkers, cfg.p_halt, cfg.l_max,
+        cfg.reweight,
+    )
+    h = mll.make_h_operator(trace_x, f, sigma_n2, graph.n_nodes)
+    res = cg.cg_solve(h, y, tol=1e-5, max_iters=cg_iters,
+                      precond_diag=h.diag_approx())
+    cross = linops.chunked_khat_cross(graph, trace_x, f, walk_key, cfg, chunk)
+    return cross.matvec(res.x), res.iters, jnp.all(res.converged)
+
+
+def run(fast: bool = True):
+    sizes = [10_000, 100_000, 1_000_000]
+    cfg = (
+        walks.WalkConfig(n_walkers=4, p_halt=0.25, l_max=4)
+        if fast
+        else walks.WalkConfig(n_walkers=16, p_halt=0.1, l_max=8)
+    )
+    key = jax.random.PRNGKey(0)
+    mod = modulation.diffusion(l_max=cfg.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    s2 = 0.05
+
+    rows, table, speedups = [], {}, {}
+    for n in sizes:
+        graph = generators.ring(n, k=3)
+        rng = np.random.default_rng(n)
+        obs = rng.choice(n, N_OBS, replace=False).astype(np.int32)
+        y = rng.standard_normal(N_OBS).astype(np.float32)
+        qnodes = jnp.asarray(rng.choice(n, Q_BATCH, replace=False)
+                             .astype(np.int32))
+        cand = jnp.asarray(rng.choice(n, N_CAND, replace=False)
+                           .astype(np.int32))
+
+        # --- build the serving state (one O(m³) ingest) -------------------
+        empty = serving.init_state(graph, key, f, s2, CAPACITY, cfg)
+        ms_build = _time(lambda: jax.block_until_ready(
+            serving.ingest(empty, obs, y).chol))
+        state = serving.ingest(empty, obs, y)
+        table[f"serve_build/N{n}"] = ms_build
+        rows.append(dict(name=f"serving_build_N{n}",
+                         us_per_call=f"{ms_build * 1e3:.0f}",
+                         N=n, m=N_OBS, capacity=CAPACITY))
+
+        # --- observe(): one incremental row-append ------------------------
+        node, y_new = int(rng.integers(n)), float(rng.standard_normal())
+        ms_obs = _time(lambda: jax.block_until_ready(
+            serving.observe(state, node, y_new).chol), reps=5)
+        table[f"observe/N{n}"] = ms_obs
+        rows.append(dict(name=f"serving_observe_N{n}",
+                         us_per_call=f"{ms_obs * 1e3:.0f}", N=n, m=N_OBS))
+
+        # --- batched queries: closed-form moments for Q_BATCH nodes -------
+        ms_query = _time(lambda: jax.block_until_ready(
+            serving.posterior_moments(state, qnodes)[0]), reps=5)
+        qps = Q_BATCH / (ms_query / 1e3)
+        table[f"query_batch/N{n}"] = ms_query
+        rows.append(dict(name=f"serving_query_batch_N{n}",
+                         us_per_call=f"{ms_query * 1e3:.0f}", N=n,
+                         q=Q_BATCH, queries_per_sec=f"{qps:.0f}"))
+
+        # --- the from-scratch equivalent (CG + chunked K̂_{·x} over N) ----
+        obs_j, y_j = jnp.asarray(obs), jnp.asarray(y)
+        sec, (_, cg_iters_used, cg_conv) = timeit_result(
+            lambda: _refit_posterior_mean(
+                graph, obs_j, f, s2, y_j, key,
+                cfg=cfg, chunk=CHUNK, cg_iters=CG_ITERS,
+            )
+        )                                     # timed call doubles as the
+        ms_refit = sec * 1e3                  # CG-diagnostics source
+        table[f"refit_query/N{n}"] = ms_refit
+        speedups[f"observe/N{n}"] = round(ms_refit / ms_obs, 1)
+        speedups[f"query_batch/N{n}"] = round(ms_refit / ms_query, 1)
+        rows.append(dict(name=f"serving_refit_query_N{n}",
+                         us_per_call=f"{ms_refit * 1e3:.0f}", N=n,
+                         cg_iters_used=int(cg_iters_used),
+                         cg_converged=bool(cg_conv),
+                         speedup_observe=speedups[f"observe/N{n}"],
+                         speedup_query=speedups[f"query_batch/N{n}"]))
+
+        # --- one BO step each way -----------------------------------------
+        def bo_step_incremental():
+            draws = serving.thompson_draw(state, cand, jax.random.PRNGKey(3))
+            pick = int(jnp.argmax(draws[:, 0]))
+            return jax.block_until_ready(
+                serving.observe(state, int(cand[pick]), 0.0).chol)
+
+        ms_bo_inc = _time(bo_step_incremental, reps=3)
+        table[f"bo_step_incremental/N{n}"] = ms_bo_inc
+        rows.append(dict(name=f"serving_bo_step_incremental_N{n}",
+                         us_per_call=f"{ms_bo_inc * 1e3:.0f}", N=n,
+                         n_candidates=N_CAND))
+
+        ms_bo_refit = _time(lambda: jax.block_until_ready(
+            posterior.pathwise_samples_chunked(
+                graph, obs_j, f, s2, y_j, jax.random.PRNGKey(2), key, cfg,
+                chunk=CHUNK, n_samples=1, cg_iters=CG_ITERS,
+            )))
+        table[f"bo_step_refit/N{n}"] = ms_bo_refit
+        speedups[f"bo_step/N{n}"] = round(ms_bo_refit / ms_bo_inc, 1)
+        rows.append(dict(name=f"serving_bo_step_refit_N{n}",
+                         us_per_call=f"{ms_bo_refit * 1e3:.0f}", N=n,
+                         speedup_bo_step=speedups[f"bo_step/N{n}"]))
+
+    artifact = {
+        "host_backend": jax.default_backend(),
+        "unit": "ms_per_call",
+        "chunk": CHUNK,
+        "capacity": CAPACITY,
+        "n_obs": N_OBS,
+        "q_batch": Q_BATCH,
+        "walk_config": dict(n_walkers=cfg.n_walkers, p_halt=cfg.p_halt,
+                            l_max=cfg.l_max),
+        "speedups": speedups,
+        "results": table,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    rows.append(dict(name="serving_artifact", path=os.path.abspath(OUT_PATH)))
+    return rows
+
+
+if __name__ == "__main__":
+    bench_main(run)

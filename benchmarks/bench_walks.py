@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit
+from benchmarks._util import bench_main, timeit, timeit_result
 from repro.core import modulation, walks
 from repro.gp import posterior
 from repro.graphs import generators
@@ -95,14 +95,23 @@ def run(fast: bool = True):
                        f"(> {MONO_LIMIT}-node limit); chunked path covers it",
             ))
 
-        ms_bo = _time(lambda: posterior.pathwise_samples_chunked(
-            graph, obs, f, 0.05, y, jax.random.PRNGKey(2), key, cfg,
-            chunk=CHUNK, n_samples=1, cg_iters=64,
-        ))
+        # The timed call surfaces its own inner-CG diagnostics
+        # (CGResult.converged via return_diagnostics): a silently maxed-out
+        # CG would make the timing meaningless.
+        sec, (_, cg_iters_used, cg_conv) = timeit_result(
+            lambda: posterior.pathwise_samples_chunked(
+                graph, obs, f, 0.05, y, jax.random.PRNGKey(2), key, cfg,
+                chunk=CHUNK, n_samples=1, cg_iters=64,
+                return_diagnostics=True,
+            )
+        )
+        ms_bo = sec * 1e3
         table[f"bo_step/N{n}"] = ms_bo
         rows.append(dict(
             name=f"walks_bo_step_N{n}", us_per_call=f"{ms_bo * 1e3:.0f}",
             N=n, n_obs=N_OBS, chunk=CHUNK,
+            cg_iters_used=int(cg_iters_used),
+            cg_converged=bool(cg_conv),
         ))
 
     artifact = {

@@ -56,6 +56,7 @@ def main() -> None:
         bench_classification,
         bench_regression,
         bench_scaling,
+        bench_serving,
         bench_spmv,
         bench_walks,
         roofline,
@@ -64,6 +65,7 @@ def main() -> None:
     suites = [
         ("spmv (backend registry / BENCH_spmv.json)", bench_spmv),
         ("walks (walk sampler / BENCH_walks.json)", bench_walks),
+        ("serving (online engine / BENCH_serving.json)", bench_serving),
         ("scaling (Table 1 / Fig 2)", bench_scaling),
         ("ablation (Table 5)", bench_ablation),
         ("regression (Fig 3)", bench_regression),

@@ -4,6 +4,12 @@ influential user in a social network by Thompson-sampling BO with GRF-GPs.
     PYTHONPATH=src python examples/bo_social_network.py --nodes 20000
     PYTHONPATH=src python examples/bo_social_network.py --nodes 1000000  # 1M
 
+Default engine is the *incremental* serving loop (repro/serving): one
+ServeState reused across the run, O(m²) Cholesky appends per observation,
+joint Thompson draws over a candidate set — no full-graph trace and no
+N-scale pathwise draw per step.  ``--engine refit`` restores the paper's
+from-scratch loop (materialised trace + pathwise sample per round).
+
 The BO state checkpoints every iteration — kill and rerun to resume."""
 import argparse
 import time
@@ -23,6 +29,10 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--init", type=int, default=200)
     ap.add_argument("--walkers", type=int, default=20)
+    ap.add_argument("--engine", choices=["incremental", "refit"],
+                    default="incremental")
+    ap.add_argument("--candidates", type=int, default=2048,
+                    help="Thompson candidate set per round (incremental)")
     ap.add_argument("--ckpt", default="/tmp/grf_bo_ckpt")
     args = ap.parse_args()
 
@@ -36,12 +46,18 @@ def main():
     obj = lambda idx: objective_true[idx] + 0.05 * rng.standard_normal(len(idx))
     print(f"  graph built in {time.time()-t0:.1f}s; max degree {int(deg.max())}")
 
-    print("sampling GRF walks (kernel initialisation, O(N)) ...")
-    t0 = time.time()
-    tr = walks.sample_walks(g, jax.random.PRNGKey(0), n_walkers=args.walkers,
-                            p_halt=0.15, l_max=5)
-    print(f"  {args.nodes} nodes × {tr.slots} slots in {time.time()-t0:.1f}s "
-          f"({tr.loads.size * 12 / 1e9:.2f} GB)")
+    cfg = walks.WalkConfig(n_walkers=args.walkers, p_halt=0.15, l_max=5)
+    tr = None
+    if args.engine == "refit":
+        print("sampling GRF walks (kernel initialisation, O(N)) ...")
+        t0 = time.time()
+        tr = walks.sample_walks(g, jax.random.PRNGKey(0),
+                                n_walkers=args.walkers, p_halt=0.15, l_max=5)
+        print(f"  {args.nodes} nodes × {tr.slots} slots in "
+              f"{time.time()-t0:.1f}s ({tr.loads.size * 12 / 1e9:.2f} GB)")
+    else:
+        print("incremental engine: no full-graph trace — walk rows are "
+              "sampled lazily per observation/query")
 
     mod = modulation.diffusion(l_max=5)
     mgr = CheckpointManager(args.ckpt, keep=2)
@@ -75,11 +91,19 @@ def main():
                         "regret": st.regret})
 
     t0 = time.time()
-    st = thompson.thompson_sampling(
-        tr, mod, obj, jax.random.PRNGKey(1), n_init=args.init,
-        n_steps=args.steps, refit_every=10, refit_steps=10, f_max=fmax,
-        state=state, checkpoint_cb=ckpt_cb,
-    )
+    if args.engine == "incremental":
+        st = thompson.thompson_sampling_incremental(
+            g, cfg, mod, obj, jax.random.PRNGKey(1), n_init=args.init,
+            n_steps=args.steps, refit_every=10, refit_steps=10, f_max=fmax,
+            n_candidates=args.candidates, state=state,
+            checkpoint_cb=ckpt_cb,
+        )
+    else:
+        st = thompson.thompson_sampling(
+            tr, mod, obj, jax.random.PRNGKey(1), n_init=args.init,
+            n_steps=args.steps, refit_every=10, refit_steps=10, f_max=fmax,
+            state=state, checkpoint_cb=ckpt_cb,
+        )
     mgr.wait()
     print(f"BO finished in {time.time()-t0:.1f}s; final simple regret "
           f"{st.regret[-1]:.4f}")

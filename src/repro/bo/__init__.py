@@ -1,2 +1,6 @@
 from . import baselines, thompson  # noqa: F401
-from .thompson import BOState, thompson_sampling  # noqa: F401
+from .thompson import (  # noqa: F401
+    BOState,
+    thompson_sampling,
+    thompson_sampling_incremental,
+)

@@ -11,6 +11,7 @@ from .posterior import (  # noqa: F401
     gaussian_nlpd,
     pathwise_samples,
     posterior_mean,
+    posterior_moments,
     predictive_moments_from_samples,
     rmse,
 )

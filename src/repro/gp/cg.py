@@ -15,8 +15,13 @@ import jax.numpy as jnp
 
 class CGResult(NamedTuple):
     x: jax.Array          # [N, R] solution
-    iters: jax.Array      # scalar int32 — iterations executed
+    iters: jax.Array      # scalar int32 — iterations executed (iters_used)
     resnorm: jax.Array    # [R] final residual norms
+    converged: jax.Array  # [R] bool — per-column ‖r‖ ≤ tol·‖b‖ at exit.
+    #                       A False here means the solve hit max_iters with
+    #                       that column still above tolerance; benchmarks
+    #                       must surface it (bench_walks/bench_serving) so
+    #                       silent non-convergence can't skew timings.
 
 
 def _jacobi(precond_diag):
@@ -84,7 +89,8 @@ def cg_solve(
     state = (x0, r0, z0, p0, rz0, jnp.asarray(0, jnp.int32))
     x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
     out = x[:, 0] if squeeze else x
-    return CGResult(out, iters, jnp.sqrt(dot(res, res)))
+    resnorm = jnp.sqrt(dot(res, res))
+    return CGResult(out, iters, resnorm, resnorm <= thresh)
 
 
 def cg_solve_fixed(
@@ -94,8 +100,12 @@ def cg_solve_fixed(
     precond_diag: jax.Array | None = None,
     dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
     unroll: bool = False,
+    tol: float = 1e-5,
 ) -> CGResult:
     """Fixed-iteration CG via lax.scan (no early exit).
+
+    ``tol`` only grades the reported ``converged`` field (‖r‖ ≤ tol·‖b‖ at
+    exit) — it never changes the iteration count.
 
     Used by the dry-run GP cell: with ``unroll=True`` every iteration appears
     in the compiled HLO, so cost_analysis counts the real FLOPs/collectives
@@ -128,4 +138,7 @@ def cg_solve_fixed(
         body, state, None, length=iters, unroll=iters if unroll else 1
     )
     out = x[:, 0] if squeeze else x
-    return CGResult(out, jnp.asarray(iters, jnp.int32), jnp.sqrt(dot(res, res)))
+    resnorm = jnp.sqrt(dot(res, res))
+    thresh = tol * jnp.maximum(jnp.sqrt(dot(b, b)), 1e-30)
+    return CGResult(out, jnp.asarray(iters, jnp.int32), resnorm,
+                    resnorm <= thresh)

@@ -136,7 +136,8 @@ def pathwise_samples_chunked(
     cg_tol: float = 1e-5,
     cg_iters: int = 512,
     obs_mask: jax.Array | None = None,
-) -> jax.Array:
+    return_diagnostics: bool = False,
+):
     """Eq. 12 over all N nodes with the full-graph Φ *never materialised*.
 
     The prior draw g = Φw and the cross correction K̂_{·x}u stream Φ in
@@ -145,12 +146,21 @@ def pathwise_samples_chunked(
     RNG is counter-based, ``walk_key`` makes Φ_x and the streamed Φ rows of
     the same underlying feature matrix — this path equals
     ``pathwise_samples`` on the monolithic trace sampled with ``walk_key``.
-    Peak memory: O(chunk·K + N·n_samples) instead of O(N·K)."""
-    return _pathwise_samples_chunked(
+    Peak memory: O(chunk·K + N·n_samples) instead of O(N·K).
+
+    ``return_diagnostics=True`` additionally returns (iters_used, converged)
+    of the *actual* inner CG solve (gp/cg.CGResult fields) — benchmarks log
+    these so silent non-convergence can't skew timings; a side solve of a
+    different right-hand side would not measure the same thing."""
+    out = _pathwise_samples_chunked(
         graph, train_nodes, f, sigma_n2, y, key, walk_key, cg_tol, obs_mask,
         cfg=cfg, chunk=chunk, n_samples=n_samples, cg_iters=cg_iters,
         spmv_backend=dispatch.get_backend(),
     )
+    samples, iters, converged = out
+    if return_diagnostics:
+        return samples, iters, converged
+    return samples
 
 
 @partial(
@@ -183,11 +193,11 @@ def _pathwise_samples_chunked(
             cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
         )
         h = make_h_operator(trace_x, f, noise, n)
-        u = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
-                     precond_diag=h.diag_approx()).x
+        sol = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
+                       precond_diag=h.diag_approx())
         cross = linops.chunked_khat_cross(graph, trace_x, f, walk_key, cfg,
                                           chunk)
-        return g + cross.matvec(u)
+        return g + cross.matvec(sol.x), sol.iters, jnp.all(sol.converged)
 
 
 def predictive_moments_from_samples(samples: jax.Array):
@@ -195,6 +205,23 @@ def predictive_moments_from_samples(samples: jax.Array):
     mean = jnp.mean(samples, axis=1)
     var = jnp.var(samples, axis=1)
     return mean, var
+
+
+def posterior_moments(state, query_nodes: jax.Array):
+    """*Exact* closed-form Eq. 3/4 from a serving state's cached Cholesky.
+
+    The no-CG counterpart of :func:`predictive_moments_from_samples`: where
+    the ensemble estimate carries O(1/√S) Monte-Carlo error, this returns
+    the GP's exact predictive mean and variance under the GRF estimator —
+    μ = K̂_{q,x}(K̂_xx+σ²I)⁻¹y and σ² = K̂_qq − K̂_{q,x}(K̂_xx+σ²I)⁻¹K̂_{x,q}
+    — in O(q·m²) via two triangular solves (repro.serving.state).
+
+    ``state`` is a :class:`repro.serving.ServeState`; build one with
+    ``serving.init_state`` + ``serving.ingest`` or stream observations in
+    with ``serving.observe``.  Returns (mean[q], var[q])."""
+    from ..serving import state as serving_state
+
+    return serving_state.posterior_moments(state, query_nodes)
 
 
 def gaussian_nlpd(y: jax.Array, mean: jax.Array, var: jax.Array) -> jax.Array:

@@ -1,8 +1,9 @@
 """Backend registry for the GRF sparse linear-algebra stack (DESIGN.md §3).
 
 Every sparse product in the codebase — ``phi_matvec`` (gather), ``phi_t_matvec``
-(scatter) and the fused ``khat_matvec`` — is dispatched through this registry
-instead of hard-coding an implementation at the call site.  Three backends:
+(scatter), the fused ``khat_matvec`` and the serving cross-Gram
+``gram_block`` — is dispatched through this registry instead of hard-coding
+an implementation at the call site.  Three backends:
 
   * ``"xla"``              pure-jnp gather/scatter (differentiable, portable).
   * ``"pallas"``           compiled Mosaic kernels (TPU).
@@ -123,6 +124,27 @@ def khat_matvec(
         return ops.spmv_xla(vals_rows, cols_rows, u)
     return ops.khat_pallas(
         vals_rows, cols_rows, vals_cols, cols_cols, v, n_nodes,
+        interpret=_interpret(backend),
+    )
+
+
+def gram_block(
+    vals_rows, cols_rows, vals_cols, cols_cols, *, backend: str | None = None,
+):
+    """G = Φ_rows Φ_colsᵀ as a dense [M_rows, M_cols] block (no N-space).
+
+    The serving hot path: cross-covariance K̂_{q,x} between lazily-sampled
+    query rows and the cached train rows of a ServeState — O(M_r·M_c·K²)
+    compare-and-accumulate, never materialising anything N-long.  Handles
+    duplicate deposit columns exactly, so diag(gram_block(Φ, Φ)) is the
+    *exact* ‖φ(i)‖² (cf. features.khat_diag_exact)."""
+    backend = _check(backend) if backend is not None else get_backend()
+    from .gram_block import ops
+
+    if backend == "xla":
+        return ops.gram_block_xla(vals_rows, cols_rows, vals_cols, cols_cols)
+    return ops.gram_block_pallas(
+        vals_rows, cols_rows, vals_cols, cols_cols,
         interpret=_interpret(backend),
     )
 

@@ -1,0 +1,2 @@
+from .gram_block import gram_block  # noqa: F401
+from .ref import gram_block_ref, gram_lookup_ref  # noqa: F401

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: sparse×sparse cross-Gram block G = Φ_rows Φ_colsᵀ.
+
+The serving hot path (DESIGN.md §3.7): every posterior query against an
+online :class:`~repro.serving.state.ServeState` reduces to one rectangular
+Gram block K̂_{q,x} between the lazily-sampled query rows and the cached
+train rows.  Both operands are ELL payloads, so the product never touches
+the N-dimensional node space at all — the contraction is a masked
+compare-and-accumulate over deposit slots.
+
+Layout:
+
+  * The *train* payload (vals_cols/cols_cols, [M_x, K_x]) is pinned to block
+    0 of the grid so it stays **entirely VMEM-resident across every grid
+    step** — the capacity×K train block is a few hundred KB (e.g. 1024 rows
+    × 144 slots × 8 B ≈ 1.2 MB ≪ 16 MB VMEM), and every query block reads it
+    at on-chip latency.
+  * Query rows are tiled into BQ-row blocks streamed HBM→VMEM once.
+  * Inside the kernel a ``fori_loop`` walks the K_r query slots; each step
+    materialises one [BQ, M_x, K_x] compare block, so the live intermediate
+    is BQ·M_x·K_x·4 B (BQ=8, M_x=1024, K_x=144 → 4.7 MB) instead of the 4-D
+    [BQ, K_r, M_x, K_x] tensor.
+
+Grid: (ceil(M_r / BQ),).  Per-step VMEM:
+  M_x·K_x·8 (resident train payload) + BQ·K_r·8 (query block)
+  + BQ·M_x·(K_x + 1)·4 (compare block + output).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BQ = 8
+
+
+def _gram_kernel(vals_q_ref, cols_q_ref, vals_x_ref, cols_x_ref, out_ref):
+    vals_q = vals_q_ref[:]                   # [BQ, K_r]
+    cols_q = cols_q_ref[:]                   # [BQ, K_r]
+    vals_x = vals_x_ref[:]                   # [M_x, K_x] — VMEM-resident
+    cols_x = cols_x_ref[:]
+    k_r = vals_q.shape[1]
+
+    def slot(k, acc):
+        c = jax.lax.dynamic_index_in_dim(cols_q, k, axis=1)   # [BQ, 1]
+        v = jax.lax.dynamic_index_in_dim(vals_q, k, axis=1)   # [BQ, 1]
+        match = (cols_x[None, :, :] == c[:, :, None]).astype(jnp.float32)
+        contrib = jnp.sum(vals_x[None, :, :] * match, axis=2)  # [BQ, M_x]
+        return acc + v * contrib
+
+    out_ref[:] = jax.lax.fori_loop(
+        0, k_r, slot, jnp.zeros(out_ref.shape, jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def gram_block(
+    vals_rows: jax.Array,
+    cols_rows: jax.Array,
+    vals_cols: jax.Array,
+    cols_cols: jax.Array,
+    *,
+    block_q: int = DEFAULT_BQ,
+    interpret: bool = False,
+) -> jax.Array:
+    """G = Φ_rows Φ_colsᵀ ∈ R^{M_r × M_c}.  See ref.py for semantics."""
+    mr, kr = vals_rows.shape
+    mx, kx = vals_cols.shape
+
+    bq = min(block_q, max(8, mr))
+    pad = (-mr) % bq
+    if pad:
+        # Zero vals ⇒ padded query rows produce zero Gram rows.
+        vals_rows = jnp.pad(vals_rows, ((0, pad), (0, 0)))
+        cols_rows = jnp.pad(cols_rows, ((0, pad), (0, 0)))
+    mp = mr + pad
+
+    y = pl.pallas_call(
+        _gram_kernel,
+        grid=(mp // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, kr), lambda i: (i, 0)),
+            pl.BlockSpec((bq, kr), lambda i: (i, 0)),
+            pl.BlockSpec((mx, kx), lambda i: (0, 0)),
+            pl.BlockSpec((mx, kx), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, mx), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, mx), jnp.float32),
+        interpret=interpret,
+    )(
+        vals_rows.astype(jnp.float32), cols_rows,
+        vals_cols.astype(jnp.float32), cols_cols,
+    )
+    return y[:mr] if pad else y

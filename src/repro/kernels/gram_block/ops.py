@@ -1,0 +1,55 @@
+"""Backend entry points for the cross-Gram block.
+
+``gram_block_xla`` is the pure-jnp path (autodiff for free).
+``gram_block_pallas`` wraps the Pallas kernel in ``jax.custom_vjp``: G is
+bilinear in the two value payloads, and each cotangent is a weighted sparse
+lookup (``gram_lookup_ref``) —
+
+    d_vals_rows[i,k] = Σ_j g[i,j] · Φ_cols[j, cols_rows[i,k]]
+    d_vals_cols[j,l] = Σ_i g[i,j] · Φ_rows[i, cols_cols[j,l]]
+
+— so hyperparameter gradients (serving refits differentiate the Gram w.r.t.
+the modulation vector ``f``) flow through the kernel backend.  The lookup
+cotangent is a different contraction shape from the forward (an [M, K] ELL
+payload, not an [M_r, M_c] block), so the backward runs on the N-free jnp
+oracle rather than re-dressing the forward kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..dispatch import float0_zeros as _float0
+from .gram_block import gram_block
+from .ref import gram_block_ref, gram_lookup_ref
+
+gram_block_xla = gram_block_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _gram_p(vals_rows, cols_rows, vals_cols, cols_cols, interpret):
+    return gram_block(
+        vals_rows, cols_rows, vals_cols, cols_cols, interpret=interpret
+    )
+
+
+def _gram_fwd(vals_rows, cols_rows, vals_cols, cols_cols, interpret):
+    y = _gram_p(vals_rows, cols_rows, vals_cols, cols_cols, interpret)
+    return y, (vals_rows, cols_rows, vals_cols, cols_cols)
+
+
+def _gram_bwd(interpret, res, g):
+    vals_rows, cols_rows, vals_cols, cols_cols = res
+    d_rows = gram_lookup_ref(g, vals_cols, cols_cols, cols_rows)
+    d_cols = gram_lookup_ref(g.T, vals_rows, cols_rows, cols_cols)
+    return d_rows, _float0(cols_rows), d_cols, _float0(cols_cols)
+
+
+_gram_p.defvjp(_gram_fwd, _gram_bwd)
+
+
+def gram_block_pallas(
+    vals_rows, cols_rows, vals_cols, cols_cols, *, interpret: bool = False
+):
+    return _gram_p(vals_rows, cols_rows, vals_cols, cols_cols, interpret)

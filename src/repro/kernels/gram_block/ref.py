@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the sparse×sparse cross-Gram block (serving hot path).
+
+``gram_block`` computes G = Φ_rows Φ_colsᵀ ∈ R^{M_r × M_c} between two ELL
+row sets *without any N-dimensional intermediate*: entry (i, j) is the inner
+product of two sparse feature rows,
+
+    G[i, j] = Σ_k Σ_l vals_rows[i,k] · vals_cols[j,l]
+                        · [cols_rows[i,k] == cols_cols[j,l]],
+
+which handles duplicate deposit columns exactly (unlike the Σ vals² diagonal
+approximation in core/features.khat_diag_approx).  Cost is O(M_r·M_c·K²)
+compute and O(M_c·K²) memory — independent of N, which is what makes this
+the right primitive for serving K̂_{q,x} against a 10⁶-node graph where a
+dense Φ ([M, N]) or a scattered N-vector per row is the memory wall.
+
+The lax.map over query rows keeps the peak intermediate at one
+[M_c, K_c, K_r] block instead of materialising the 4-D match tensor.
+
+These define the semantics the Pallas kernel must reproduce (parity tests
+in tests/test_gram_block.py) and double as the ``"xla"`` backend path in
+kernels/dispatch.py — fully differentiable w.r.t. both value payloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_block_ref(
+    vals_rows: jnp.ndarray,
+    cols_rows: jnp.ndarray,
+    vals_cols: jnp.ndarray,
+    cols_cols: jnp.ndarray,
+) -> jnp.ndarray:
+    """G = Φ_rows Φ_colsᵀ for two ELL payloads.
+
+    Args:
+      vals_rows: f32[M_r, K_r] ELL values of the query rows (0 = padding).
+      cols_rows: i32[M_r, K_r] ELL column indices of the query rows.
+      vals_cols: f32[M_c, K_c] ELL values of the train rows.
+      cols_cols: i32[M_c, K_c] ELL column indices of the train rows.
+    Returns: f32[M_r, M_c].
+    """
+
+    def one_row(args):
+        vq, cq = args  # [K_r], [K_r]
+        match = (cols_cols[:, :, None] == cq[None, None, :]).astype(
+            vals_cols.dtype
+        )  # [M_c, K_c, K_r]
+        return jnp.einsum("cl,clk,k->c", vals_cols, match, vq)
+
+    return jax.lax.map(one_row, (vals_rows, cols_rows))
+
+
+def gram_lookup_ref(
+    g_rows: jnp.ndarray,
+    vals_cols: jnp.ndarray,
+    cols_cols: jnp.ndarray,
+    cols_rows: jnp.ndarray,
+) -> jnp.ndarray:
+    """t[i,k] = Σ_j g_rows[i,j] · Φ_cols[j, cols_rows[i,k]] — the VJP kernel.
+
+    The cotangent of ``gram_block`` w.r.t. ``vals_rows`` is a weighted lookup
+    of the *other* side's sparse rows at this side's deposit columns; like the
+    forward it is N-free (O(M_r·M_c·K²), one [M_c, K_c, K_r] block live).
+
+    Args:
+      g_rows: f32[M_r, M_c] output cotangent (or any row-weighting).
+      vals_cols / cols_cols: the ELL payload being looked up.
+      cols_rows: i32[M_r, K_r] columns at which to evaluate.
+    Returns: f32[M_r, K_r].
+    """
+
+    def one_row(args):
+        gi, cq = args  # [M_c], [K_r]
+        match = (cols_cols[:, :, None] == cq[None, None, :]).astype(
+            vals_cols.dtype
+        )  # [M_c, K_c, K_r]
+        return jnp.einsum("c,cl,clk->k", gi, vals_cols, match)
+
+    return jax.lax.map(one_row, (g_rows, cols_rows))

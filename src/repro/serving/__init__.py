@@ -1,0 +1,12 @@
+"""Online GP serving: incremental Cholesky state, lazy query-row features,
+and a micro-batching front end (DESIGN.md §3.7)."""
+from . import engine, state, update  # noqa: F401
+from .engine import GPRequest, GPServeLoop, thompson_draw  # noqa: F401
+from .state import ServeState, init_state, posterior_moments  # noqa: F401
+from .update import (  # noqa: F401
+    forget,
+    ingest,
+    observe,
+    observe_batch,
+    refit,
+)

@@ -1,0 +1,281 @@
+"""Incremental ServeState updates: Cholesky row-append / downdate / refit
+(DESIGN.md §3.7).
+
+The cost model that makes online BO serving-shaped:
+
+  * :func:`observe` / :func:`observe_batch` — appending observation m+1 is
+    one lazy walk_sample (O(K) — the only place N appears, through the graph
+    arrays), one cross-Gram row (O(m·K²), kernels/gram_block), one forward
+    triangular solve (O(m²)) and an O(m²) α re-solve: **O(m²) per step**
+    against the O(N·√N) of a fresh pathwise fit.
+  * :func:`forget` — removing observation p is a permutation-free shift plus
+    a rank-1 Cholesky *update* of the trailing block (removing row p turns
+    the outer product L[p+1:,p]·L[p+1:,p]ᵀ from factored into additive —
+    LINPACK dchud), again O(m²).
+  * :func:`refit` / :func:`ingest` — the O(m³) from-scratch refactorisation,
+    used when hyperparameters change (every Gram entry moves) and as the
+    parity reference the incremental paths are tested against.
+
+All updates run on static-capacity buffers with a traced ``count``: the
+dead block of the Cholesky is the identity and dead feature rows carry zero
+loads, so every full-size solve/Gram is exact without dynamic shapes, and
+nothing retraces as observations stream in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+from ..core import features
+from ..core.walks import WalkTrace
+from ..kernels import dispatch
+from .state import ServeState, query_rows, solve_chol
+
+
+# The jitted updates return ONLY these leaves: returning the whole state
+# would make XLA copy the (unchanged, possibly 10⁶-node) graph arrays into
+# fresh output buffers on every observe() — the host reattaches them.
+_MUTABLE = ("nodes", "y", "count", "trace", "chol", "alpha")
+
+
+def _pack(state: ServeState):
+    return tuple(getattr(state, k) for k in _MUTABLE)
+
+
+def _unpack(state: ServeState, packed) -> ServeState:
+    return dataclasses.replace(state, **dict(zip(_MUTABLE, packed)))
+
+
+def _factorize(vals_x, cols_x, live, sigma_n2):
+    """Lower Cholesky of [K̂_xx + σ²I on live; I on dead] (block-diagonal)."""
+    gram = dispatch.gram_block(vals_x, cols_x, vals_x, cols_x)
+    a = gram + jnp.diag(jnp.where(live > 0, sigma_n2, 1.0))
+    return jnp.linalg.cholesky(a)
+
+
+def _refit_impl(state: ServeState) -> ServeState:
+    chol = _factorize(
+        state.vals(), state.trace.cols, state.live_mask(), state.sigma_n2
+    )
+    return dataclasses.replace(
+        state, chol=chol, alpha=solve_chol(chol, state.y)
+    )
+
+
+def _append(state: ServeState, node, y_t) -> ServeState:
+    """One Cholesky row-append at position m = count (O(m²))."""
+    idx = jnp.arange(state.capacity)
+    m = state.count
+    trace1 = query_rows(state, jnp.atleast_1d(node))
+    vals1 = features.feature_values(trace1, state.f)
+    k_vec = dispatch.gram_block(
+        vals1, trace1.cols, state.vals(), state.trace.cols
+    )[0]                                      # [capacity]; 0 on dead slots
+    k_nn = features.khat_diag_exact(trace1, state.f)[0]
+    ell = solve_triangular(state.chol, k_vec, lower=True)
+    d2 = k_nn + state.sigma_n2 - jnp.dot(ell, ell)
+    d = jnp.sqrt(jnp.maximum(d2, 1e-9))       # jitter guard: keep L SPD
+    row = jnp.where(idx < m, ell, 0.0)
+    row = jnp.where(idx == m, d, row)
+    sel = idx == m
+    return dataclasses.replace(
+        state,
+        nodes=jnp.where(sel, node, state.nodes),
+        y=jnp.where(sel, y_t, state.y),
+        count=jnp.minimum(m + 1, state.capacity),
+        trace=WalkTrace(
+            cols=jnp.where(sel[:, None], trace1.cols[0], state.trace.cols),
+            loads=jnp.where(sel[:, None], trace1.loads[0], state.trace.loads),
+            lens=jnp.where(sel[:, None], trace1.lens[0], state.trace.lens),
+        ),
+        chol=jnp.where(sel[:, None], row[None, :], state.chol),
+    )
+
+
+@partial(jax.jit, static_argnames=("spmv_backend",))
+def _observe_batch(state, nodes, ys, *, spmv_backend):
+    with dispatch.use_backend(spmv_backend):
+        # Scan only over the mutable leaves — the graph arrays stay scan
+        # *constants* instead of riding the loop carry (at 10⁶ nodes the
+        # adjacency is far larger than the whole serving state).
+        def step(carry, xy):
+            st = dataclasses.replace(
+                state, nodes=carry[0], y=carry[1], count=carry[2],
+                trace=WalkTrace(*carry[3]), chol=carry[4],
+            )
+            st = _append(st, xy[0], xy[1])
+            return (
+                st.nodes, st.y, st.count,
+                (st.trace.cols, st.trace.loads, st.trace.lens), st.chol,
+            ), None
+
+        init = (
+            state.nodes, state.y, state.count,
+            (state.trace.cols, state.trace.loads, state.trace.lens),
+            state.chol,
+        )
+        (nodes_b, y_b, count, tr, chol), _ = jax.lax.scan(
+            step, init, (nodes, ys)
+        )
+        return (nodes_b, y_b, count, WalkTrace(*tr), chol,
+                solve_chol(chol, y_b))
+
+
+def observe_batch(state: ServeState, nodes, ys) -> ServeState:
+    """Append a batch of observations by sequential Cholesky row-appends.
+
+    α is re-solved once at the end (two O(m²) triangular solves).  Static
+    shapes cannot grow: appending past ``capacity`` raises here (when the
+    count is concrete — under an outer jit the overflow cannot be checked
+    and the excess appends are dropped by the masked writes)."""
+    nodes = jnp.asarray(nodes, jnp.int32).reshape(-1)
+    ys = jnp.asarray(ys, jnp.float32).reshape(-1)
+    if not isinstance(state.count, jax.core.Tracer):
+        if int(state.count) + nodes.shape[0] > state.capacity:
+            raise ValueError(
+                f"observing {nodes.shape[0]} more would exceed serving "
+                f"capacity {state.capacity} (count={int(state.count)}); "
+                "build the state with a larger capacity"
+            )
+    return _unpack(state, _observe_batch(
+        state, nodes, ys, spmv_backend=dispatch.get_backend(),
+    ))
+
+
+def observe(state: ServeState, node, y) -> ServeState:
+    """Append one observation: O(m²), no CG, nothing N-scale."""
+    return observe_batch(state, [node], [y])
+
+
+def _cholupdate(chol: jax.Array, x: jax.Array) -> jax.Array:
+    """L̃ with L̃L̃ᵀ = LLᵀ + xxᵀ (LINPACK dchud, columns swept in order).
+
+    Columns where x has already been rotated to zero are no-ops (cos=1,
+    sin=0), so a zero-padded x updates only the trailing block — exactly
+    the forget() shift pattern.  Dead diagonal entries are 1, never 0."""
+    idx = jnp.arange(chol.shape[0])
+
+    def body(k, carry):
+        ell, x = carry
+        lkk, xk = ell[k, k], x[k]
+        r = jnp.sqrt(lkk * lkk + xk * xk)
+        cos, sin = r / lkk, xk / lkk
+        below = idx > k
+        col = ell[:, k]
+        newcol = jnp.where(below, (col + sin * x) / cos, col).at[k].set(r)
+        x = jnp.where(below, cos * x - sin * newcol, x)
+        return ell.at[:, k].set(newcol), x
+
+    chol, _ = jax.lax.fori_loop(0, chol.shape[0], body, (chol, x))
+    return chol
+
+
+@jax.jit
+def _forget(state: ServeState, slot):
+    c = state.capacity
+    idx = jnp.arange(c)
+    m = state.count
+    # Shift everything after `slot` up one position (dead fill at the top).
+    src = jnp.where(idx >= slot, jnp.minimum(idx + 1, c - 1), idx)
+    # Removing row/col `slot` de-factors its outer product: the trailing
+    # block satisfies L̃L̃ᵀ = L'L'ᵀ + SSᵀ with S = L[slot+1:, slot].
+    x = jnp.where(idx >= slot, state.chol[:, slot][src], 0.0)
+    chol = _cholupdate(state.chol[src][:, src], x)
+    new_count = m - 1
+    dead = idx >= new_count
+    chol = jnp.where(
+        dead[:, None] | dead[None, :], jnp.eye(c, dtype=chol.dtype), chol
+    )
+    live = ~dead
+    y = jnp.where(live, state.y[src], 0.0)
+    return (
+        jnp.where(live, state.nodes[src], 0),
+        y,
+        new_count,
+        WalkTrace(
+            cols=jnp.where(live[:, None], state.trace.cols[src], 0),
+            loads=jnp.where(live[:, None], state.trace.loads[src], 0.0),
+            lens=jnp.where(live[:, None], state.trace.lens[src], 0),
+        ),
+        chol,
+        solve_chol(chol, y),
+    )
+
+
+def forget(state: ServeState, slot) -> ServeState:
+    """Remove the observation in buffer position ``slot`` (0 ≤ slot < count).
+
+    Rank-1 Cholesky downdate of the stored factor — O(m²), no
+    refactorisation.  Later observations shift up one slot."""
+    return _unpack(state, _forget(state, jnp.asarray(slot, jnp.int32)))
+
+
+@partial(jax.jit, static_argnames=("spmv_backend",))
+def _ingest(state, nodes, ys, count, *, spmv_backend):
+    with dispatch.use_backend(spmv_backend):
+        trace = query_rows(state, nodes)
+        live = jnp.arange(state.capacity) < count
+        state = dataclasses.replace(
+            state,
+            nodes=jnp.where(live, nodes, 0),
+            y=jnp.where(live, ys, 0.0),
+            count=count,
+            trace=WalkTrace(
+                cols=trace.cols,
+                loads=trace.loads * live[:, None],
+                lens=trace.lens,
+            ),
+        )
+        return _pack(_refit_impl(state))
+
+
+def ingest(state: ServeState, nodes, ys) -> ServeState:
+    """Replace the whole observation set and refactorise once (O(m³)).
+
+    The from-scratch entry point: BO init sets, hyperparameter refits that
+    also change the data, and the parity reference for the incremental
+    appends."""
+    nodes = jnp.asarray(nodes, jnp.int32).reshape(-1)
+    ys = jnp.asarray(ys, jnp.float32).reshape(-1)
+    count = nodes.shape[0]
+    if count > state.capacity:
+        raise ValueError(
+            f"{count} observations exceed serving capacity {state.capacity}"
+        )
+    pad = state.capacity - count
+    return _unpack(state, _ingest(
+        state,
+        jnp.pad(nodes, (0, pad)),
+        jnp.pad(ys, (0, pad)),
+        jnp.asarray(count, jnp.int32),
+        spmv_backend=dispatch.get_backend(),
+    ))
+
+
+@partial(jax.jit, static_argnames=("spmv_backend",))
+def _refit(state, *, spmv_backend):
+    with dispatch.use_backend(spmv_backend):
+        return _pack(_refit_impl(state))
+
+
+def refit(state: ServeState, f=None, sigma_n2=None, y=None) -> ServeState:
+    """From-scratch refactorisation of the live block (O(m³)).
+
+    Use after hyperparameter updates (new ``f``/``sigma_n2`` move every Gram
+    entry, so the incremental factor is stale) or to swap the target buffer
+    ``y`` (full-capacity array, dead slots zero).  The cached walk rows are
+    structure-only and do not depend on ``f`` — nothing is re-sampled."""
+    updates = {}
+    if f is not None:
+        updates["f"] = jnp.asarray(f, jnp.float32)
+    if sigma_n2 is not None:
+        updates["sigma_n2"] = jnp.asarray(sigma_n2, jnp.float32)
+    if y is not None:
+        updates["y"] = jnp.asarray(y, jnp.float32)
+    if updates:
+        state = dataclasses.replace(state, **updates)
+    return _unpack(state, _refit(state, spmv_backend=dispatch.get_backend()))

@@ -1,0 +1,107 @@
+"""Cross-Gram block kernel: oracle parity, backends, gradients (serving)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.gram_block import gram_block, gram_block_ref
+from repro.kernels.gram_block import ops
+
+
+def _payload(rng, m, k, n, dup_frac=0.3):
+    """Random ELL payload with deliberate duplicate columns + zero padding."""
+    vals = rng.standard_normal((m, k)).astype(np.float32)
+    cols = rng.integers(0, n, (m, k)).astype(np.int32)
+    # Force duplicates within rows (the case diag_approx gets wrong).
+    dup = rng.random((m, k)) < dup_frac
+    cols[dup] = cols[:, :1].repeat(k, axis=1)[dup]
+    vals[rng.random((m, k)) < 0.2] = 0.0  # padding slots
+    return jnp.asarray(vals), jnp.asarray(cols)
+
+
+def _dense(vals, cols, n):
+    out = np.zeros((vals.shape[0], n), np.float64)
+    np.add.at(out, (np.repeat(np.arange(vals.shape[0]), vals.shape[1]),
+                    np.array(cols).reshape(-1)),
+              np.array(vals, np.float64).reshape(-1))
+    return out
+
+
+@pytest.fixture(scope="module")
+def payloads():
+    rng = np.random.default_rng(0)
+    n = 80
+    vq, cq = _payload(rng, 23, 9, n)
+    vx, cx = _payload(rng, 17, 6, n)
+    return n, vq, cq, vx, cx
+
+
+def test_ref_matches_dense(payloads):
+    """The N-free compare-and-accumulate oracle == dense Φ_q Φ_xᵀ."""
+    n, vq, cq, vx, cx = payloads
+    want = _dense(vq, cq, n) @ _dense(vx, cx, n).T
+    got = np.array(gram_block_ref(vq, cq, vx, cx))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_matches_oracle(payloads):
+    _, vq, cq, vx, cx = payloads
+    want = np.array(gram_block_ref(vq, cq, vx, cx))
+    got = np.array(gram_block(vq, cq, vx, cx, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_q", [8, 16, 64])
+def test_kernel_block_size_invariance(payloads, block_q):
+    _, vq, cq, vx, cx = payloads
+    want = np.array(gram_block_ref(vq, cq, vx, cx))
+    got = np.array(
+        gram_block(vq, cq, vx, cx, block_q=block_q, interpret=True)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_single_row_and_square_forms(payloads):
+    """Mq=1 (the observe() append row) and the square K̂_qq form."""
+    n, vq, cq, vx, cx = payloads
+    one = np.array(gram_block(vq[:1], cq[:1], vx, cx, interpret=True))
+    np.testing.assert_allclose(
+        one, np.array(gram_block_ref(vq[:1], cq[:1], vx, cx)),
+        rtol=1e-5, atol=1e-6,
+    )
+    sq = np.array(gram_block(vx, cx, vx, cx, interpret=True))
+    np.testing.assert_allclose(sq, sq.T, rtol=1e-5, atol=1e-6)
+    # exact diagonal: handles duplicate columns (= ‖φ‖², not Σ vals²)
+    want_diag = np.einsum("ij,ij->i", _dense(vx, cx, n), _dense(vx, cx, n))
+    np.testing.assert_allclose(np.diag(sq), want_diag, rtol=1e-5, atol=1e-5)
+
+
+def test_dispatched_backend_matches_ref(payloads):
+    """Whatever backend CI pinned (REPRO_SPMV_BACKEND) agrees with the
+    oracle to fp32 tolerance — the acceptance gate for the CI matrix."""
+    _, vq, cq, vx, cx = payloads
+    want = np.array(gram_block_ref(vq, cq, vx, cx))
+    got = np.array(dispatch.gram_block(vq, cq, vx, cx))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_custom_vjp_matches_autodiff(payloads):
+    """Pallas-path gradients w.r.t. both value payloads == jnp autodiff."""
+    _, vq, cq, vx, cx = payloads
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((vq.shape[0], vx.shape[0])),
+                    jnp.float32)
+
+    def loss_ref(a, b):
+        return jnp.vdot(g, gram_block_ref(a, cq, b, cx))
+
+    def loss_pal(a, b):
+        return jnp.vdot(g, ops.gram_block_pallas(a, cq, b, cx,
+                                                 interpret=True))
+
+    want = jax.grad(loss_ref, argnums=(0, 1))(vq, vx)
+    got = jax.grad(loss_pal, argnums=(0, 1))(vq, vx)
+    for w, gt in zip(want, got):
+        np.testing.assert_allclose(np.array(gt), np.array(w),
+                                   rtol=1e-5, atol=1e-6)

@@ -1,0 +1,303 @@
+"""Online serving engine: incremental Cholesky, closed-form moments,
+micro-batching engine, incremental BO, checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.checkpoint import CheckpointManager
+from repro.core import features, modulation, walks
+from repro.gp import posterior
+from repro.graphs import generators, signals
+
+
+CFG = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+S2 = 0.05
+CAPACITY = 24
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = generators.grid2d(10, 10)
+    mod = modulation.diffusion(l_max=CFG.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    obs = rng.choice(100, 14, replace=False).astype(np.int32)
+    y = rng.standard_normal(14).astype(np.float32)
+    empty = serving.init_state(g, key, f, S2, capacity=CAPACITY, cfg=CFG)
+    return g, f, key, obs, y, empty
+
+
+def _dense_reference(g, f, key, obs):
+    """fp64 ground truth from the materialised K̂ of the *same* Φ."""
+    tr = walks.sample_walks(g, key, CFG.n_walkers, CFG.p_halt, CFG.l_max)
+    k = np.array(features.materialize_khat(tr, f)).astype(np.float64)
+    a = k[np.ix_(obs, obs)] + S2 * np.eye(len(obs))
+    return k, a
+
+
+def test_incremental_append_matches_refactorization(setup):
+    """Row-by-row Cholesky appends == one from-scratch factorisation, and
+    both match the fp64 numpy factor of the dense Gram."""
+    g, f, key, obs, y, empty = setup
+    st_inc = serving.observe_batch(empty, obs, y)
+    st_ref = serving.ingest(empty, obs, y)
+    np.testing.assert_allclose(np.array(st_inc.chol), np.array(st_ref.chol),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.array(st_inc.alpha), np.array(st_ref.alpha),
+                               rtol=1e-4, atol=1e-5)
+    _, a = _dense_reference(g, f, key, obs)
+    chol64 = np.linalg.cholesky(a)
+    m = len(obs)
+    np.testing.assert_allclose(np.array(st_inc.chol)[:m, :m], chol64,
+                               rtol=1e-4, atol=1e-4)
+    alpha64 = np.linalg.solve(a, y.astype(np.float64))
+    np.testing.assert_allclose(np.array(st_inc.alpha)[:m], alpha64,
+                               rtol=1e-3, atol=1e-4)
+    # dead block stays identity / zero
+    assert np.allclose(np.array(st_inc.chol)[m:, m:], np.eye(CAPACITY - m))
+    assert np.all(np.array(st_inc.alpha)[m:] == 0.0)
+
+
+def test_interleaved_observe_matches_ingest(setup):
+    """Streaming one-at-a-time through observe() lands on the same state."""
+    g, f, key, obs, y, empty = setup
+    st = empty
+    for node, y_t in zip(obs[:6], y[:6]):
+        st = serving.observe(st, int(node), float(y_t))
+    st_ref = serving.ingest(empty, obs[:6], y[:6])
+    assert int(st.count) == 6
+    np.testing.assert_allclose(np.array(st.chol), np.array(st_ref.chol),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.array(st.alpha), np.array(st_ref.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_forget_downdate_matches_refactorization(setup):
+    """Rank-1 downdate of slot p == refactorising the remaining m−1 rows."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    for slot in (0, 5, len(obs) - 1):
+        got = serving.forget(st, slot)
+        keep = np.delete(np.arange(len(obs)), slot)
+        want = serving.ingest(empty, obs[keep], y[keep])
+        assert int(got.count) == len(obs) - 1
+        np.testing.assert_array_equal(np.array(got.nodes),
+                                      np.array(want.nodes))
+        np.testing.assert_allclose(np.array(got.chol), np.array(want.chol),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.array(got.alpha), np.array(want.alpha),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_refit_hyperparam_swap_matches_fresh_ingest(setup):
+    """refit(f', σ²') refactorises the cached rows == a fresh build with the
+    new hyperparameters (rows are structure-only, nothing is re-sampled)."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    f2 = np.array(f) * 1.3
+    got = serving.refit(st, f=f2, sigma_n2=0.11)
+    fresh = serving.init_state(g, key, jnp.asarray(f2), 0.11,
+                               capacity=CAPACITY, cfg=CFG)
+    want = serving.ingest(fresh, obs, y)
+    np.testing.assert_allclose(np.array(got.chol), np.array(want.chol),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.array(got.alpha), np.array(want.alpha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_closed_form_moments_match_dense(setup):
+    """posterior_moments == exact Eq. 3/4 on the dense K̂ of the same Φ."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    q = np.arange(0, 100, 7, dtype=np.int32)
+    k, a = _dense_reference(g, f, key, obs)
+    a_inv = np.linalg.inv(a)
+    want_mean = k[np.ix_(q, obs)] @ (a_inv @ y)
+    want_var = np.diag(k)[q] - np.einsum(
+        "qi,ij,qj->q", k[np.ix_(q, obs)], a_inv, k[np.ix_(q, obs)]
+    )
+    mean, var = serving.posterior_moments(st, jnp.asarray(q))
+    np.testing.assert_allclose(np.array(mean), want_mean, rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.array(var), want_var, rtol=1e-4, atol=1e-5)
+    # and via the gp-layer re-export
+    mean2, var2 = posterior.posterior_moments(st, jnp.asarray(q))
+    np.testing.assert_array_equal(np.array(mean), np.array(mean2))
+    np.testing.assert_array_equal(np.array(var), np.array(var2))
+
+
+def test_ensemble_moments_converge_to_closed_form(setup):
+    """predictive_moments_from_samples → posterior_moments as S grows
+    (the sample ensemble is a Monte-Carlo estimate of the exact Eq. 3/4)."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    q = jnp.arange(100)
+    mean, var = serving.posterior_moments(st, q)
+    samples = posterior.pathwise_samples(
+        walks.sample_walks(g, key, CFG.n_walkers, CFG.p_halt, CFG.l_max),
+        jnp.asarray(obs), f, S2, jnp.asarray(y), jax.random.PRNGKey(9),
+        n_samples=4096,
+    )
+    mc_mean, mc_var = posterior.predictive_moments_from_samples(samples)
+    # MC error ~ sqrt(var/S) for the mean, ~ var·sqrt(2/S) for the variance.
+    tol = 4.0 * np.sqrt(np.array(var) / 4096)
+    assert np.all(np.abs(np.array(mc_mean) - np.array(mean)) < tol + 1e-3)
+    np.testing.assert_allclose(np.array(mc_var), np.array(var),
+                               rtol=0.15, atol=5e-3)
+
+
+def test_engine_batched_equals_per_query(setup):
+    """Micro-batched waves answer exactly what one-node queries answer,
+    regardless of how requests split across waves."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    q = np.arange(0, 100, 3, dtype=np.int32)          # 34 nodes, batch 8
+    want_mean, want_var = serving.posterior_moments(st, jnp.asarray(q))
+
+    loop = serving.GPServeLoop(st, batch=8)
+    reqs = [serving.GPRequest(nodes=q[:5]), serving.GPRequest(nodes=q[5:20]),
+            serving.GPRequest(nodes=q[20:])]
+    loop.run(reqs)
+    assert all(r.done for r in reqs)
+    got_mean = np.concatenate([r.mean for r in reqs])
+    got_var = np.concatenate([r.var for r in reqs])
+    np.testing.assert_allclose(got_mean, np.array(want_mean), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(got_var, np.array(want_var), rtol=1e-5,
+                               atol=1e-6)
+    # per-query singletons agree too
+    single = serving.GPRequest(nodes=q[:1])
+    serving.GPServeLoop(st, batch=8).run([single])
+    np.testing.assert_allclose(single.mean[0], np.array(want_mean)[0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_thompson_draw_statistics(setup):
+    """Joint draws have the closed-form marginal mean/std (many samples)."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    q = jnp.asarray([3, 41, 77], jnp.int32)
+    mean, var = serving.posterior_moments(st, q)
+    draws = np.array(serving.thompson_draw(st, q, jax.random.PRNGKey(5),
+                                           n_samples=6000))
+    np.testing.assert_allclose(draws.mean(axis=1), np.array(mean), atol=0.08)
+    np.testing.assert_allclose(draws.std(axis=1), np.sqrt(np.array(var)),
+                               rtol=0.15, atol=0.02)
+
+
+def test_incremental_thompson_matches_refit_regret():
+    """The serving-shaped BO loop tracks the refit loop's regret curve on a
+    small smooth objective (statistically — different acquisition noise)."""
+    from repro.bo import thompson
+
+    g = generators.grid2d(12, 12)
+    obj_true = signals.unimodal_grid(12, 12)
+    fmax = float(obj_true.max())
+    rng = np.random.default_rng(0)
+
+    def obj(idx):
+        return obj_true[np.asarray(idx)] + 0.01 * rng.standard_normal(
+            len(np.atleast_1d(idx))
+        )
+
+    cfg = walks.WalkConfig(n_walkers=8, p_halt=0.2, l_max=4)
+    mod = modulation.diffusion(l_max=4)
+    kw = dict(n_init=15, n_steps=15, refit_every=5, refit_steps=8,
+              noise_std=0.05, f_max=fmax)
+    st_inc = thompson.thompson_sampling_incremental(
+        g, cfg, mod, obj, jax.random.PRNGKey(2), **kw
+    )
+    tr = walks.sample_walks(
+        g, jax.random.fold_in(jax.random.PRNGKey(2), 7919), 8, 0.2, 4
+    )
+    st_ref = thompson.thompson_sampling(
+        tr, mod, obj, jax.random.PRNGKey(2), **kw
+    )
+    # both loops close in on the peak, and land near each other
+    assert st_inc.regret[-1] < 0.4, st_inc.regret
+    assert st_ref.regret[-1] < 0.4, st_ref.regret
+    assert abs(st_inc.regret[-1] - st_ref.regret[-1]) < 0.3
+    assert st_inc.regret[-1] <= st_inc.regret[0] + 1e-6
+
+
+def test_incremental_resume_reproduces_uninterrupted_run():
+    """Mid-refit-cycle checkpoint resume replays the exact trajectory
+    (candidate sets per-(key,t)-seeded; normalisation stats re-windowed to
+    the last refit round), and mismatched resume arguments fail fast."""
+    import copy
+
+    from repro.bo import thompson
+
+    g = generators.barabasi_albert(300, m=3, seed=0)
+    deg = np.asarray(g.deg, float)
+    obj_true = (deg - deg.mean()) / (deg.std() + 1e-9)
+
+    def obj(idx):  # noise-free: any divergence is the loop's fault
+        return obj_true[np.asarray(idx)]
+
+    cfg = walks.WalkConfig(4, 0.25, 3)
+    mod = modulation.diffusion(l_max=3)
+    kw = dict(n_init=10, n_steps=6, refit_every=3, refit_steps=3,
+              noise_std=0.05, f_max=float(obj_true.max()), n_candidates=48)
+
+    snap = {}
+
+    def cb(st):
+        if st.iteration == 4:  # mid-cycle: not a refit round
+            snap["st"] = copy.deepcopy(st)
+
+    full = thompson.thompson_sampling_incremental(
+        g, cfg, mod, obj, jax.random.PRNGKey(5), checkpoint_cb=cb, **kw
+    )
+    resumed = thompson.thompson_sampling_incremental(
+        g, cfg, mod, obj, jax.random.PRNGKey(5), state=snap["st"], **kw
+    )
+    np.testing.assert_array_equal(full.x_buf, resumed.x_buf)
+    assert full.regret == resumed.regret
+
+    with pytest.raises(ValueError, match="needs"):        # undersized bufs
+        thompson.thompson_sampling_incremental(
+            g, cfg, mod, obj, jax.random.PRNGKey(5), state=snap["st"],
+            **{**kw, "n_steps": 50},
+        )
+    with pytest.raises(ValueError, match="imply"):        # wrong batch_size
+        thompson.thompson_sampling_incremental(
+            g, cfg, mod, obj, jax.random.PRNGKey(5), state=snap["st"],
+            batch_size=2, **{**kw, "n_steps": 1},
+        )
+
+
+def test_observe_past_capacity_raises(setup):
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    free = CAPACITY - len(obs)
+    with pytest.raises(ValueError, match="capacity"):
+        serving.observe_batch(st, np.arange(free + 1), np.zeros(free + 1))
+
+
+def test_servestate_checkpoint_roundtrip(setup, tmp_path):
+    """ServeState → CheckpointManager → restore: byte-identical answers.
+
+    Arrays are stored host-global (elastic restore: any mesh/device count
+    re-materialises the same state)."""
+    g, f, key, obs, y, empty = setup
+    st = serving.observe_batch(empty, obs, y)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(3, st, extra={"note": "serving"})
+
+    # restore into a *freshly built* example (different process shape)
+    example = serving.init_state(g, key, f, S2, capacity=CAPACITY, cfg=CFG)
+    restored, manifest = mgr.restore(example)
+    assert manifest["step"] == 3
+    assert int(restored.count) == int(st.count)
+    q = jnp.asarray([1, 50, 99], jnp.int32)
+    want = serving.posterior_moments(st, q)
+    got = serving.posterior_moments(restored, q)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    # observing after restore continues the incremental factorisation
+    cont = serving.observe(restored, 42, 0.3)
+    assert int(cont.count) == int(st.count) + 1
