@@ -35,9 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import bench_main, timeit, timeit_result
-from repro import serving
+from repro import serving, solvers
 from repro.core import linops, modulation, walks
-from repro.gp import cg, mll, posterior
+from repro.gp import mll, posterior
 from repro.graphs import generators
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
@@ -60,14 +60,15 @@ def _refit_posterior_mean(graph, obs, f, sigma_n2, y, walk_key,
     """The pre-serving query path: fresh CG fit + chunked K̂_{·x} over all N.
 
     Returns (mean[N], iters_used, converged) — the CG diagnostics feed the
-    bench rows (gp/cg.CGResult.converged)."""
+    bench rows (solvers.CGResult.converged)."""
     trace_x = walks.sample_walks_for_nodes(
         graph, obs, walk_key, cfg.n_walkers, cfg.p_halt, cfg.l_max,
         cfg.reweight,
     )
     h = mll.make_h_operator(trace_x, f, sigma_n2, graph.n_nodes)
-    res = cg.cg_solve(h, y, tol=1e-5, max_iters=cg_iters,
-                      precond_diag=h.diag_approx())
+    res = solvers.solve(
+        h, y, solvers.SolveStrategy(tol=1e-5, max_iters=cg_iters)
+    )
     cross = linops.chunked_khat_cross(graph, trace_x, f, walk_key, cfg, chunk)
     return cross.matvec(res.x), res.iters, jnp.all(res.converged)
 

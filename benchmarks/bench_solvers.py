@@ -1,0 +1,181 @@
+"""Solver strategy benchmark (DESIGN.md §3.8) → ``BENCH_solvers.json``.
+
+The acceptance numbers for the solvers/ layer at N ∈ {1e4, 1e5, 1e6} on a
+clustered training block (T = 4√N contiguous ring nodes — heavily
+overlapping walks, the regime solve-heavy kernels create) at σ_n² = 1e-2:
+
+  * ``solve/{none,jacobi,nystrom}/N*``   cold strategy solves of
+    H v = b: wall-clock in ``results``, iteration counts in ``iters``,
+    per-solve convergence in ``converged``.  Acceptance: nystrom ≥2× fewer
+    iterations than jacobi at N=1e5.
+  * ``solve_warm/jacobi/N*``  the same system after a simulated
+    hyperparameter drift (f ← 1.02·f), warm-started from the pre-drift
+    solution vs cold — the BO/serving refit shape.
+  * ``fit50/{cold,warm}/N1e5``  a 50-step MLL fit, cold-started vs the
+    warm-started strategy (probes frozen per chunk, [v_y, v_z] carried
+    through the scan).  Acceptance: warm ≥1.5× fewer TOTAL CG iterations.
+
+``iters`` and ``converged`` ride outside ``results`` so the CI timing gate
+only compares like-for-like wall-clocks; ``check_regression.py`` gates on
+them separately (blocking: any converged=False, or an iteration count
+regressing >1.5× vs the committed baseline).  The headline ratios land in
+``iteration_ratios``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import bench_main, timeit_result
+from repro import solvers
+from repro.core import linops, modulation, walks
+from repro.gp import mll
+from repro.graphs import generators
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_solvers.json")
+
+SIGMA_N2 = 1e-2               # the acceptance operating point
+TOL = 1e-6
+MAX_ITERS = 3000
+RANK = 256                    # Nyström pivot budget
+FIT_N = 100_000               # the 50-step fit runs at the acceptance size
+FIT_STEPS = 50
+
+
+def _train_block(n: int) -> int:
+    """Clustered training size T = 4√N (contiguous ids ⇒ correlated rows)."""
+    return min(4 * int(np.sqrt(n)), n // 4)
+
+
+def run(fast: bool = True):
+    sizes = [10_000, 100_000, 1_000_000]
+    cfg = (
+        walks.WalkConfig(n_walkers=8, p_halt=0.15, l_max=6)
+        if fast
+        else walks.WalkConfig(n_walkers=16, p_halt=0.1, l_max=8)
+    )
+    mod = modulation.diffusion(l_max=cfg.l_max)
+    # Solve-heavy operating point: long-lengthscale diffusion (β=4) with
+    # σ_f ≫ σ_n — exactly where Jacobi stalls (ISSUE 5 motivation).
+    f = mod({"log_beta": jnp.log(jnp.asarray(4.0)),
+             "log_sigma_f": jnp.log(jnp.asarray(25.0))})
+    key = jax.random.PRNGKey(0)
+
+    rows, table, iters_tab, conv_tab, ratios = [], {}, {}, {}, {}
+
+    for n in sizes:
+        graph = generators.ring(n, k=3)
+        t = _train_block(n)
+        train = jnp.arange(t)
+        trace_x = walks.sample_walks_for_nodes(
+            graph, train, key, cfg.n_walkers, cfg.p_halt, cfg.l_max,
+            cfg.reweight,
+        )
+        h = linops.shifted(trace_x, f, jnp.asarray(SIGMA_N2), n)
+        b = jnp.asarray(
+            np.random.default_rng(n).standard_normal(t), jnp.float32
+        )
+
+        sol_cache = {}
+        for pc in ("none", "jacobi", "nystrom"):
+            st = solvers.SolveStrategy(
+                tol=TOL, max_iters=MAX_ITERS, preconditioner=pc,
+                precond_rank=RANK,
+            )
+            sec, res = timeit_result(lambda st=st: solvers.solve(h, b, st))
+            ms = sec * 1e3
+            sol_cache[pc] = res
+            table[f"solve/{pc}/N{n}"] = ms
+            iters_tab[f"solve/{pc}/N{n}"] = int(res.iters)
+            conv_tab[f"solve/{pc}/N{n}"] = bool(jnp.all(res.converged))
+            rows.append(dict(name=f"solvers_solve_{pc}_N{n}",
+                             us_per_call=f"{ms * 1e3:.0f}", N=n, T=t,
+                             iters=int(res.iters),
+                             converged=bool(jnp.all(res.converged))))
+        ratios[f"nystrom_vs_jacobi/N{n}"] = round(
+            iters_tab[f"solve/jacobi/N{n}"]
+            / max(iters_tab[f"solve/nystrom/N{n}"], 1), 2,
+        )
+
+        # Warm start across a simulated hyperparameter drift (refit shape):
+        # the pre-drift solution seeds the post-drift solve.
+        f2 = f * 1.02
+        h2 = linops.shifted(trace_x, f2, jnp.asarray(SIGMA_N2), n)
+        st_warm = solvers.SolveStrategy(
+            tol=TOL, max_iters=MAX_ITERS, warm_start=True
+        )
+        x0 = sol_cache["jacobi"].x
+        sec, res_w = timeit_result(
+            lambda: solvers.solve(h2, b, st_warm, x0=x0)
+        )
+        ms = sec * 1e3
+        table[f"solve_warm/jacobi/N{n}"] = ms
+        iters_tab[f"solve_warm/jacobi/N{n}"] = int(res_w.iters)
+        conv_tab[f"solve_warm/jacobi/N{n}"] = bool(jnp.all(res_w.converged))
+        res_c = solvers.solve(h2, b, st_warm.with_(warm_start=False))
+        iters_tab[f"solve_cold/jacobi/N{n}"] = int(res_c.iters)
+        conv_tab[f"solve_cold/jacobi/N{n}"] = bool(jnp.all(res_c.converged))
+        ratios[f"warm_vs_cold_solve/N{n}"] = round(
+            int(res_c.iters) / max(int(res_w.iters), 1), 2
+        )
+        rows.append(dict(name=f"solvers_solve_warm_N{n}",
+                         us_per_call=f"{ms * 1e3:.0f}", N=n,
+                         iters_warm=int(res_w.iters),
+                         iters_cold=int(res_c.iters)))
+
+        # 50-step MLL fit, cold vs warm (acceptance size only — the fit is
+        # the expensive row and the criterion binds at N=1e5).
+        if n == FIT_N:
+            y = jnp.asarray(
+                np.random.default_rng(7).standard_normal(t), jnp.float32
+            )
+            base = solvers.MLL_DEFAULT.with_(tol=1e-4, max_iters=512)
+            for label, warm in (("cold", False), ("warm", True)):
+                strategy = base.with_(warm_start=warm)
+                sec, fit = timeit_result(lambda strategy=strategy: (
+                    mll.fit_hyperparams(
+                        trace_x, mod, y, n, jax.random.PRNGKey(3),
+                        steps=FIT_STEPS, chunk=FIT_STEPS, n_probes=8,
+                        strategy=strategy,
+                    )
+                ))
+                total = sum(r["cg_iters"] for r in fit.history)
+                ms = sec * 1e3
+                table[f"fit{FIT_STEPS}/{label}/N{n}"] = ms
+                iters_tab[f"fit{FIT_STEPS}/{label}/N{n}"] = total
+                conv_tab[f"fit{FIT_STEPS}/{label}/N{n}"] = all(
+                    r["cg_converged"] for r in fit.history
+                )
+                rows.append(dict(name=f"solvers_fit{FIT_STEPS}_{label}_N{n}",
+                                 us_per_call=f"{ms * 1e3:.0f}", N=n, T=t,
+                                 total_cg_iters=total))
+            ratios[f"warm_vs_cold_fit{FIT_STEPS}/N{n}"] = round(
+                iters_tab[f"fit{FIT_STEPS}/cold/N{n}"]
+                / max(iters_tab[f"fit{FIT_STEPS}/warm/N{n}"], 1), 2,
+            )
+
+    artifact = {
+        "host_backend": jax.default_backend(),
+        "unit": "ms_per_call",
+        "sigma_n2": SIGMA_N2,
+        "tol": TOL,
+        "nystrom_rank": RANK,
+        "walk_config": dict(n_walkers=cfg.n_walkers, p_halt=cfg.p_halt,
+                            l_max=cfg.l_max),
+        "iteration_ratios": ratios,
+        "iters": iters_tab,
+        "converged": conv_tab,
+        "results": table,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    rows.append(dict(name="solvers_artifact", path=os.path.abspath(OUT_PATH)))
+    return rows
+
+
+if __name__ == "__main__":
+    bench_main(run)

@@ -5,8 +5,12 @@ Two modes, matching the two CI steps (DESIGN.md §3.6):
   * ``--mode correctness`` (blocking): the fresh artifact must exist, parse,
     carry a non-empty ``results`` table with finite positive numbers, and
     keep every correctness-class key the baseline has (schema stability —
-    a silently dropped benchmark row is how hot paths rot).  Exit 1 on any
-    violation.
+    a silently dropped benchmark row is how hot paths rot).  Artifacts that
+    carry a ``converged`` table (BENCH_solvers.json) additionally fail on
+    any False entry, and ones carrying an ``iters`` table fail on any
+    iteration count regressing more than --iters-threshold (default 1.5×)
+    vs the baseline — CG iteration blow-ups are correctness-class, not
+    timing jitter.  Exit 1 on any violation.
   * ``--mode timing`` (informational, the CI step wraps it in
     continue-on-error): per shared key print the fresh/baseline ratio and
     exit 1 if the *median* ratio exceeds --threshold (default 2×).  The
@@ -32,7 +36,9 @@ def _load(path: str) -> dict:
         return json.load(fh)
 
 
-def check_correctness(baseline: dict, fresh: dict, label: str) -> list[str]:
+def check_correctness(
+    baseline: dict, fresh: dict, label: str, iters_threshold: float = 1.5
+) -> list[str]:
     errors = []
     results = fresh.get("results")
     if not isinstance(results, dict) or not results:
@@ -45,6 +51,37 @@ def check_correctness(baseline: dict, fresh: dict, label: str) -> list[str]:
     # only exist on TPU baselines); only same-backend schemas must match.
     if baseline.get("host_backend") == fresh.get("host_backend") and missing:
         errors.append(f"{label}: benchmark rows dropped vs baseline: {sorted(missing)}")
+
+    # Solver-class gates: convergence flags are hard correctness, iteration
+    # counts are deterministic enough to gate at a tight threshold — but
+    # only within one host backend (adaptive-CG trip counts legitimately
+    # differ across platforms), same rule as the results schema above.
+    for key, flag in fresh.get("converged", {}).items():
+        if not flag:
+            errors.append(f"{label}: solve did not converge: {key}")
+    base_iters = baseline.get("iters", {})
+    fresh_iters = fresh.get("iters", {})
+    if baseline.get("host_backend") == fresh.get("host_backend"):
+        dropped = set(base_iters) - set(fresh_iters)
+        if dropped:
+            errors.append(
+                f"{label}: iteration rows dropped vs baseline: {sorted(dropped)}"
+            )
+        dropped_conv = set(baseline.get("converged", {})) - set(
+            fresh.get("converged", {})
+        )
+        if dropped_conv:
+            errors.append(
+                f"{label}: convergence rows dropped vs baseline: "
+                f"{sorted(dropped_conv)}"
+            )
+        for key in sorted(set(base_iters) & set(fresh_iters)):
+            b, f = base_iters[key], fresh_iters[key]
+            if isinstance(b, (int, float)) and b > 0 and f > b * iters_threshold:
+                errors.append(
+                    f"{label}: iteration regression {key}: {b} -> {f} "
+                    f"(> {iters_threshold}x)"
+                )
     return errors
 
 
@@ -74,6 +111,7 @@ def main() -> int:
     parser.add_argument("--pair", action="append", required=True,
                         metavar="BASELINE:FRESH")
     parser.add_argument("--threshold", type=float, default=2.0)
+    parser.add_argument("--iters-threshold", type=float, default=1.5)
     args = parser.parse_args()
 
     failed = False
@@ -87,7 +125,8 @@ def main() -> int:
             failed = True
             continue
         if args.mode == "correctness":
-            errors = check_correctness(baseline, fresh, label)
+            errors = check_correctness(baseline, fresh, label,
+                                       args.iters_threshold)
             for err in errors:
                 print(err)
             failed = failed or bool(errors)

@@ -57,6 +57,7 @@ def main() -> None:
         bench_regression,
         bench_scaling,
         bench_serving,
+        bench_solvers,
         bench_spmv,
         bench_walks,
         roofline,
@@ -66,6 +67,7 @@ def main() -> None:
         ("spmv (backend registry / BENCH_spmv.json)", bench_spmv),
         ("walks (walk sampler / BENCH_walks.json)", bench_walks),
         ("serving (online engine / BENCH_serving.json)", bench_serving),
+        ("solvers (Krylov strategy layer / BENCH_solvers.json)", bench_solvers),
         ("scaling (Table 1 / Fig 2)", bench_scaling),
         ("ablation (Table 5)", bench_ablation),
         ("regression (Fig 3)", bench_regression),

@@ -34,6 +34,8 @@ from ..core.modulation import Modulation
 from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
 from ..graphs.formats import Graph
 from ..gp import mll, posterior
+from .. import solvers
+from ..solvers import SolveStrategy
 
 
 @dataclasses.dataclass
@@ -146,6 +148,8 @@ def thompson_sampling(
     graph: Graph | None = None,
     walk: WalkConfig | None = None,
     chunk: int = DEFAULT_CHUNK,
+    fit_strategy: SolveStrategy | None = None,
+    sample_strategy: SolveStrategy | None = None,
 ) -> BOState:
     """Run Alg. 3. ``objective`` maps node ids → noisy observations.
 
@@ -159,7 +163,19 @@ def thompson_sampling(
     posterior draw streams Φ in ``chunk``-row blocks and only the
     observation-set trace Φ_x ([capacity, K]) ever exists, so peak memory
     is O(chunk·K) instead of O(N·K).  The counter-based walker RNG makes
-    both paths draw from the same Φ given the same key (DESIGN.md §3.6)."""
+    both paths draw from the same Φ given the same key (DESIGN.md §3.6).
+
+    ``fit_strategy`` / ``sample_strategy`` route the refit and pathwise
+    solves through the strategy layer (repro.solvers).  The refit default
+    is the *warm-started* ``MLL_DEFAULT``: each refit chunk carries
+    [v_y, v_z] across Adam steps, and the hyperparameters themselves warm
+    start from the previous round (``init_params=state.params``) — the two
+    warm starts compose, which is what keeps per-round refits cheap
+    (BENCH_solvers.json: ≥1.5× fewer total CG iterations over a fit)."""
+    if fit_strategy is None:
+        fit_strategy = solvers.MLL_DEFAULT
+    if sample_strategy is None:
+        sample_strategy = solvers.POSTERIOR_DEFAULT
     chunked = graph is not None
     if chunked and walk is None:
         raise ValueError("chunked Thompson sampling needs a WalkConfig")
@@ -201,6 +217,7 @@ def thompson_sampling(
                 trace_x, mod, y_n, n, jax.random.fold_in(key, 1000 + t),
                 steps=refit_steps, lr=0.05, init_params=state.params,
                 init_noise=noise_std, obs_mask=mask, chunk=refit_steps,
+                strategy=fit_strategy,
             )
             state.params = res.params
 
@@ -210,13 +227,13 @@ def thompson_sampling(
             samples = posterior.pathwise_samples_chunked(
                 graph, x_all, f, s2, y_n, jax.random.fold_in(key, t),
                 walk_key, walk, chunk=chunk, n_samples=batch_size,
-                obs_mask=mask,
+                obs_mask=mask, strategy=sample_strategy,
             )
         else:
             samples = posterior.pathwise_samples(
                 trace, x_all, f, s2, y_n,
                 jax.random.fold_in(key, t), n_samples=batch_size,
-                obs_mask=mask,
+                obs_mask=mask, strategy=sample_strategy,
             )
         # Mask observed nodes, pick one argmax per sample (Alg. 3 line 8).
         picks = _argmax_picks(np.array(samples), np.arange(n), state.x_obs,
@@ -242,6 +259,7 @@ def thompson_sampling_incremental(
     n_candidates: int | None = None,
     state: BOState | None = None,
     checkpoint_cb: Callable[[BOState], None] | None = None,
+    fit_strategy: SolveStrategy | None = None,
 ) -> BOState:
     """Alg. 3 with one :class:`repro.serving.ServeState` reused end-to-end.
 
@@ -258,9 +276,15 @@ def thompson_sampling_incremental(
     ``n_candidates`` bounds the per-round Thompson candidate set (default:
     every node when N ≤ 2048, else 1024 uniform draws — the q×q joint
     covariance is dense).  Resume via ``state=`` exactly as the refit loop;
-    the ServeState is rebuilt from the BOState buffers on entry."""
+    the ServeState is rebuilt from the BOState buffers on entry.
+
+    ``fit_strategy`` routes the per-round hyperparameter refit through the
+    strategy layer (warm-started ``solvers.MLL_DEFAULT`` by default — same
+    composition of warm starts as :func:`thompson_sampling`)."""
     from .. import serving
 
+    if fit_strategy is None:
+        fit_strategy = solvers.MLL_DEFAULT
     n = graph.n_nodes
     walk_key = jax.random.fold_in(key, 7919)  # Φ identity, fixed across iters
     capacity = n_init + n_steps * batch_size
@@ -312,6 +336,7 @@ def thompson_sampling_incremental(
                     trace_x, mod, y_n, n, jax.random.fold_in(key, 1000 + t),
                     steps=refit_steps, lr=0.05, init_params=state.params,
                     init_noise=noise_std, obs_mask=mask, chunk=refit_steps,
+                    strategy=fit_strategy,
                 )
                 state.params = res.params
             # One O(m³) Gram refactorisation into a fresh ServeState.

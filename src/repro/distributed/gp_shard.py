@@ -12,9 +12,14 @@ The paper's O(N^{3/2}) inference expressed as a TPU collective schedule
 
 The matvec is not a fork of the single-device code: it is the *same*
 :class:`repro.core.linops.KhatOperator` / :class:`ShiftedOperator` with the
-psum injected as the operator's ``reduce`` hook (DESIGN.md §3), so backend
-dispatch, preconditioning and the mask/noise idioms stay identical across
-single-device and sharded paths.
+psum injected as the operator's ``reduce`` hook (DESIGN.md §3), and the
+solve is the *same* ``repro.solvers.solve`` under a
+:class:`repro.solvers.SolveStrategy` with the psum-reducing ``dot`` hook
+injected — backend dispatch, preconditioning and the mask/noise idioms stay
+identical across single-device and sharded paths.  (Nyström preconditioning
+is excluded on this path — assembling the pivot cross-block spans shards —
+so sharded strategies keep ``"jacobi"``; ``solvers.nystrom`` raises rather
+than silently degrading.)
 
 Per CG iteration the wire traffic is exactly one all-reduce of an N-vector
 (4 MB at N=1M, f32) — independent of walker count, which is why the method
@@ -31,7 +36,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core import linops
 from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace, walk_seed
 from ..graphs.formats import Graph
-from ..gp.cg import cg_solve, cg_solve_fixed
+from .. import solvers
+from ..solvers import SolveStrategy
 
 # jax.shard_map with replication checks off, across the API move:
 # jax >= 0.6 exposes jax.shard_map(check_vma=...); 0.4/0.5 has
@@ -72,6 +78,26 @@ def psum_reduce(axes: Sequence[str], compress: bool = False):
     return reduce
 
 
+def psum_dot(axes: Sequence[str]):
+    """Column-wise inner product reduced over the data axes — the ``dot``
+    hook ``solvers.solve`` takes under shard_map (one scalar-per-RHS psum
+    per CG iteration on top of the operator's N-vector all-reduce)."""
+
+    def dot(u, v):
+        return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
+
+    return dot
+
+
+def _resolve(strategy, tol, max_iters, adaptive=True) -> SolveStrategy:
+    """Fold legacy per-call-site literals into a sharded-default strategy."""
+    if strategy is None:
+        strategy = solvers.SHARDED_DEFAULT
+    return strategy.with_overrides(
+        tol=tol, max_iters=max_iters, adaptive=False if not adaptive else None
+    )
+
+
 def sharded_h_operator(
     trace_local: WalkTrace,
     f: jax.Array,
@@ -94,15 +120,21 @@ def sharded_cg_solve(
     b: jax.Array,
     mesh: Mesh,
     sigma_n2: float = 0.1,
-    tol: float = 1e-5,
-    max_iters: int = 256,
+    tol: float | None = None,
+    max_iters: int | None = None,
     fixed_unrolled: bool = False,
     compress: bool = False,
+    strategy: SolveStrategy | None = None,
+    return_diagnostics: bool = False,
 ):
     """Solve (K̂ + σ²I) v = b with Φ rows sharded over (pod, data).
 
     ``fixed_unrolled`` runs exactly ``max_iters`` unrolled iterations — used
-    by the dry-run so cost_analysis sees every psum (DESIGN.md §5)."""
+    by the dry-run so cost_analysis sees every psum (DESIGN.md §5).
+    ``return_diagnostics=True`` additionally returns (iters_used,
+    converged) — identical on every shard (the convergence test runs on
+    psum-reduced dots), so they replicate."""
+    strategy = _resolve(strategy, tol, max_iters, adaptive=not fixed_unrolled)
     axes = _data_axes(mesh)
     n_nodes = trace.n_nodes
     row = P(axes)
@@ -112,30 +144,21 @@ def sharded_cg_solve(
         _shard_map,
         mesh=mesh,
         in_specs=(rowk, rowk, rowk, P(), row),
-        out_specs=row,
+        out_specs=(row, P(), P()),
     )
     def run(cols, loads, lens, f, b_local):
         local = WalkTrace(cols, loads, lens)
         h = sharded_h_operator(local, f, n_nodes, axes, sigma_n2,
                                compress=compress)
+        res = solvers.solve(
+            h, b_local, strategy, dot=psum_dot(axes), unroll=fixed_unrolled,
+        )
+        return res.x, res.iters, jnp.all(res.converged)
 
-        def dot(u, v):
-            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
-
-        pre = h.diag_approx()
-        if fixed_unrolled:
-            res = cg_solve_fixed(
-                h, b_local, iters=max_iters, precond_diag=pre, dot=dot,
-                unroll=True,
-            )
-        else:
-            res = cg_solve(
-                h, b_local, tol=tol, max_iters=max_iters, precond_diag=pre,
-                dot=dot,
-            )
-        return res.x
-
-    return run(trace.cols, trace.loads, trace.lens, f, b)
+    x, iters, converged = run(trace.cols, trace.loads, trace.lens, f, b)
+    if return_diagnostics:
+        return x, iters, converged
+    return x
 
 
 def sharded_cg_solve_chunked(
@@ -147,8 +170,10 @@ def sharded_cg_solve_chunked(
     walk: WalkConfig,
     chunk: int = DEFAULT_CHUNK,
     sigma_n2: float = 0.1,
-    tol: float = 1e-5,
-    max_iters: int = 256,
+    tol: float | None = None,
+    max_iters: int | None = None,
+    strategy: SolveStrategy | None = None,
+    return_diagnostics: bool = False,
 ):
     """Solve (K̂ + σ²I) v = b with *chunk-per-shard lazy* Φ rows (§3.6).
 
@@ -158,7 +183,11 @@ def sharded_cg_solve_chunked(
     the same single psum hook KhatOperator always takes.  Per-device peak
     memory is O(chunk·K) regardless of graph size; the adjacency replicates
     (walkers cross shard boundaries).  Equals ``sharded_cg_solve`` on the
-    materialised trace sampled with the same key."""
+    materialised trace sampled with the same key.
+
+    ``return_diagnostics=True`` surfaces (iters_used, converged) instead of
+    discarding them — a maxed-out solve must be visible to callers."""
+    strategy = _resolve(strategy, tol, max_iters)
     axes = _data_axes(mesh)
     n_nodes = graph.n_nodes
     n_shards = 1
@@ -174,7 +203,7 @@ def sharded_cg_solve_chunked(
         _shard_map,
         mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), row),
-        out_specs=row,
+        out_specs=(row, P(), P()),
     )
     def run(neighbors, weights, deg, f, seed, b_local):
         idx = jnp.zeros((), jnp.int32)
@@ -187,15 +216,15 @@ def sharded_cg_solve_chunked(
         khat = linops.KhatOperator(phi_local, phi_local,
                                    reduce=psum_reduce(axes))
         h = linops.ShiftedOperator(khat, jnp.asarray(sigma_n2, jnp.float32))
+        res = solvers.solve(h, b_local, strategy, dot=psum_dot(axes))
+        return res.x, res.iters, jnp.all(res.converged)
 
-        def dot(u, v):
-            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
-
-        res = cg_solve(h, b_local, tol=tol, max_iters=max_iters,
-                       precond_diag=h.diag_approx(), dot=dot)
-        return res.x
-
-    return run(graph.neighbors, graph.weights, graph.deg, f, seed, b)
+    x, iters, converged = run(
+        graph.neighbors, graph.weights, graph.deg, f, seed, b
+    )
+    if return_diagnostics:
+        return x, iters, converged
+    return x
 
 
 def sharded_posterior_sample(
@@ -206,14 +235,24 @@ def sharded_posterior_sample(
     key: jax.Array,
     mesh: Mesh,
     sigma_n2: float = 0.1,
-    max_iters: int = 128,
+    max_iters: int | None = None,
+    strategy: SolveStrategy | None = None,
+    return_diagnostics: bool = False,
 ):
     """Pathwise posterior sample over all N nodes, fully sharded (Eq. 12).
 
     Training-set structure is expressed as a mask so every tensor stays
     row-sharded: H = M K̂ M + D where D = σ² on observed rows, 1e6 outside
     (infinite noise ⇒ unobserved rows carry no information) — the masked
-    form of :class:`repro.core.linops.ShiftedOperator`."""
+    form of :class:`repro.core.linops.ShiftedOperator`.
+
+    ``return_diagnostics=True`` surfaces the inner solve's (iters_used,
+    converged) alongside the sample.  With no explicit strategy/max_iters
+    the historical 128-iteration budget applies; an explicitly passed
+    strategy is used as-is (its own max_iters wins)."""
+    if strategy is None and max_iters is None:
+        max_iters = 128
+    strategy = _resolve(strategy, None, max_iters)
     axes = _data_axes(mesh)
     n_nodes = trace.n_nodes
     row = P(axes)
@@ -223,7 +262,7 @@ def sharded_posterior_sample(
         _shard_map,
         mesh=mesh,
         in_specs=(rowk, rowk, rowk, P(), row, row, P()),
-        out_specs=row,
+        out_specs=(row, P(), P()),
     )
     def run(cols, loads, lens, f, mask, y, key):
         local = WalkTrace(cols, loads, lens)
@@ -231,9 +270,6 @@ def sharded_posterior_sample(
         h = sharded_h_operator(local, f, n_nodes, axes, noise, mask=mask)
         khat = h.khat          # same operator, reduce hook included
         phi = khat.rows
-
-        def dot(u, v):
-            return jax.lax.psum(jnp.sum(u * v, axis=0), axes)
 
         # Prior sample g = Φ w: w is length-N (column space) and must be
         # identical on every device — derive it from the replicated key.
@@ -244,8 +280,12 @@ def sharded_posterior_sample(
             jax.random.fold_in(ke, jax.lax.axis_index(axes[-1])), g.shape
         )
         resid = mask * (y - g - eps)
-        u = cg_solve(h, resid, tol=1e-5, max_iters=max_iters,
-                     precond_diag=h.diag_approx(), dot=dot).x
-        return g + khat.matvec(mask * u)
+        res = solvers.solve(h, resid, strategy, dot=psum_dot(axes))
+        return g + khat.matvec(mask * res.x), res.iters, jnp.all(res.converged)
 
-    return run(trace.cols, trace.loads, trace.lens, f, train_mask, y_full, key)
+    s, iters, converged = run(
+        trace.cols, trace.loads, trace.lens, f, train_mask, y_full, key
+    )
+    if return_diagnostics:
+        return s, iters, converged
+    return s

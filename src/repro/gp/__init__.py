@@ -1,6 +1,13 @@
 from . import cg, exact, mll, posterior, variational  # noqa: F401
-from .cg import CGResult, cg_solve  # noqa: F401
+from .cg import CGResult, cg_solve  # noqa: F401  (deprecation shim)
+from ..solvers import (  # noqa: F401  (the Krylov strategy layer)
+    SolveStrategy,
+    cg_solve_fixed,
+    slq_logdet,
+    solve,
+)
 from .mll import (  # noqa: F401
+    exact_lml,
     fit_hyperparams,
     init_hyperparams,
     make_h_matvec,
@@ -15,3 +22,4 @@ from .posterior import (  # noqa: F401
     predictive_moments_from_samples,
     rmse,
 )
+from .variational import init_inducing_pivoted  # noqa: F401

@@ -1,144 +1,33 @@
-"""Batched-RHS conjugate-gradient solver (Lemma 1's workhorse).
+"""Deprecation shim — the Krylov stack moved to :mod:`repro.solvers`.
 
-Solves H V = B for SPD ``H`` given only a matvec, with per-column scalars so a
-batch of right-hand sides (Eq. 11: [y, z_1, ..., z_S]) shares one loop.
-``lax.while_loop`` + static shapes keep it jit/pjit-compatible; the distributed
-variant (repro/distributed) reuses this loop with psum-reducing dot products.
-"""
+``from repro.gp.cg import cg_solve`` keeps working (with a
+``DeprecationWarning`` at call time) so downstream code migrates at its own
+pace; new code should use ``repro.solvers.solve`` under a
+:class:`repro.solvers.SolveStrategy` (or the low-level ``cg_solve`` /
+``cg_solve_fixed`` re-exported there)."""
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-
-class CGResult(NamedTuple):
-    x: jax.Array          # [N, R] solution
-    iters: jax.Array      # scalar int32 — iterations executed (iters_used)
-    resnorm: jax.Array    # [R] final residual norms
-    converged: jax.Array  # [R] bool — per-column ‖r‖ ≤ tol·‖b‖ at exit.
-    #                       A False here means the solve hit max_iters with
-    #                       that column still above tolerance; benchmarks
-    #                       must surface it (bench_walks/bench_serving) so
-    #                       silent non-convergence can't skew timings.
+from ..solvers import CGResult  # noqa: F401  (re-export, unchanged API)
+from ..solvers import cg as _cg
 
 
-def _jacobi(precond_diag):
-    """M⁻¹ from a diagonal; rows with a zero diagonal (isolated nodes whose
-    diag_approx vanishes) fall back to the identity instead of dividing by
-    zero — any SPD approximation is a valid Jacobi preconditioner."""
-    if precond_diag is None:
-        return lambda v: v
-    inv = jnp.where(precond_diag > 0, 1.0 / jnp.maximum(precond_diag, 1e-30), 1.0)
-    inv = inv[:, None]
-    return lambda v: inv * v
+def _deprecated(fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.gp.cg.{fn.__name__} is deprecated; use "
+            f"repro.solvers.{fn.__name__} (or repro.solvers.solve with a "
+            "SolveStrategy)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
 
 
-def cg_solve(
-    matvec: Callable[[jax.Array], jax.Array],
-    b: jax.Array,
-    tol: float = 1e-5,
-    max_iters: int = 256,
-    precond_diag: jax.Array | None = None,
-    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
-) -> CGResult:
-    """Preconditioned CG.
-
-    Args:
-      matvec: V ↦ H V on [N, R] blocks.
-      b: [N] or [N, R] right-hand sides.
-      precond_diag: optional [N] Jacobi preconditioner diagonal (M ≈ diag(H)).
-      dot: column-wise inner product ([N,R],[N,R]) → [R]; override with a
-        psum-reducing version under shard_map.
-    """
-    squeeze = b.ndim == 1
-    if squeeze:
-        b = b[:, None]
-    n, r = b.shape
-    if dot is None:
-        dot = lambda u, v: jnp.sum(u * v, axis=0)
-    apply_m = _jacobi(precond_diag)
-
-    bnorm = jnp.sqrt(dot(b, b))
-    thresh = tol * jnp.maximum(bnorm, 1e-30)
-
-    x0 = jnp.zeros_like(b)
-    r0 = b
-    z0 = apply_m(r0)
-    p0 = z0
-    rz0 = dot(r0, z0)
-
-    def cond(state):
-        _, res, _, _, _, it = state
-        return jnp.logical_and(it < max_iters, jnp.any(jnp.sqrt(dot(res, res)) > thresh))
-
-    def body(state):
-        x, res, z, p, rz, it = state
-        hp = matvec(p)
-        php = dot(p, hp)
-        alpha = jnp.where(php > 0, rz / jnp.maximum(php, 1e-30), 0.0)
-        x = x + alpha[None, :] * p
-        res_new = res - alpha[None, :] * hp
-        z_new = apply_m(res_new)
-        rz_new = dot(res_new, z_new)
-        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
-        p_new = z_new + beta[None, :] * p
-        return (x, res_new, z_new, p_new, rz_new, it + 1)
-
-    state = (x0, r0, z0, p0, rz0, jnp.asarray(0, jnp.int32))
-    x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
-    out = x[:, 0] if squeeze else x
-    resnorm = jnp.sqrt(dot(res, res))
-    return CGResult(out, iters, resnorm, resnorm <= thresh)
-
-
-def cg_solve_fixed(
-    matvec: Callable[[jax.Array], jax.Array],
-    b: jax.Array,
-    iters: int,
-    precond_diag: jax.Array | None = None,
-    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
-    unroll: bool = False,
-    tol: float = 1e-5,
-) -> CGResult:
-    """Fixed-iteration CG via lax.scan (no early exit).
-
-    ``tol`` only grades the reported ``converged`` field (‖r‖ ≤ tol·‖b‖ at
-    exit) — it never changes the iteration count.
-
-    Used by the dry-run GP cell: with ``unroll=True`` every iteration appears
-    in the compiled HLO, so cost_analysis counts the real FLOPs/collectives
-    (a while-loop body is counted once regardless of trip count)."""
-    squeeze = b.ndim == 1
-    if squeeze:
-        b = b[:, None]
-    if dot is None:
-        dot = lambda u, v: jnp.sum(u * v, axis=0)
-    apply_m = _jacobi(precond_diag)
-
-    x0 = jnp.zeros_like(b)
-    z0 = apply_m(b)
-    state = (x0, b, z0, z0, dot(b, z0))
-
-    def body(state, _):
-        x, res, z, p, rz = state
-        hp = matvec(p)
-        php = dot(p, hp)
-        alpha = jnp.where(php > 0, rz / jnp.maximum(php, 1e-30), 0.0)
-        x = x + alpha[None, :] * p
-        res = res - alpha[None, :] * hp
-        z = apply_m(res)
-        rz_new = dot(res, z)
-        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
-        p = z + beta[None, :] * p
-        return (x, res, z, p, rz_new), None
-
-    (x, res, *_), _ = jax.lax.scan(
-        body, state, None, length=iters, unroll=iters if unroll else 1
-    )
-    out = x[:, 0] if squeeze else x
-    resnorm = jnp.sqrt(dot(res, res))
-    thresh = tol * jnp.maximum(jnp.sqrt(dot(b, b)), 1e-30)
-    return CGResult(out, jnp.asarray(iters, jnp.int32), resnorm,
-                    resnorm <= thresh)
+cg_solve = _deprecated(_cg.cg_solve)
+cg_solve_fixed = _deprecated(_cg.cg_solve_fixed)

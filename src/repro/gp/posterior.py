@@ -3,7 +3,10 @@
 A posterior sample over *all* N nodes is a prior sample plus a sparse
 correction:  g|y = g + K̂_{·x}(K̂_xx + σ²I)⁻¹(y − g(x) − ε),
 with the prior sampled as g = Φ w, w ~ N(0, I_N)  (Cov = ΦΦᵀ = K̂).
-Every product is an O(N) sparse op; the solve is CG (Lemma 1)."""
+Every product is an O(N) sparse op; the solve is CG (Lemma 1) routed
+through the strategy layer (repro.solvers, DESIGN.md §3.8) — pass
+``strategy=SolveStrategy(preconditioner="nystrom")`` to precondition the
+training-block system with the rank-r pivoted Nyström of K̂_xx."""
 from __future__ import annotations
 
 from functools import partial
@@ -15,8 +18,15 @@ from ..core import features, linops, walks
 from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
 from ..graphs.formats import Graph
 from ..kernels import dispatch
-from .cg import cg_solve
+from .. import solvers
+from ..solvers import SolveStrategy
 from .mll import make_h_operator
+
+
+def _resolve(strategy, cg_tol, cg_iters) -> SolveStrategy:
+    if strategy is None:
+        strategy = solvers.POSTERIOR_DEFAULT
+    return strategy.with_overrides(tol=cg_tol, max_iters=cg_iters)
 
 
 def posterior_mean(
@@ -25,34 +35,36 @@ def posterior_mean(
     f: jax.Array,
     sigma_n2: jax.Array,
     y: jax.Array,
-    cg_tol: float = 1e-5,
-    cg_iters: int = 512,
+    cg_tol: float | None = None,
+    cg_iters: int | None = None,
     obs_mask: jax.Array | None = None,
+    strategy: SolveStrategy | None = None,
 ) -> jax.Array:
     """MAP prediction m = K̂_{·x} (K̂_xx + σ²I)⁻¹ y over all N nodes (Eq. 3).
 
     ``obs_mask`` enables static-shape padding (padded slots ⇒ ∞ noise)."""
     # The spmv backend resolves at trace time, so it must be part of the jit
     # cache key — resolve it *outside* the jitted impl and pass it static.
+    # The strategy is static for the same reason (it shapes the CG loop).
     return _posterior_mean(
-        trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask,
+        trace, train_nodes, f, sigma_n2, y, obs_mask,
+        strategy=_resolve(strategy, cg_tol, cg_iters),
         spmv_backend=dispatch.get_backend(),
     )
 
 
-@partial(jax.jit, static_argnames=("cg_iters", "spmv_backend"))
+@partial(jax.jit, static_argnames=("strategy", "spmv_backend"))
 def _posterior_mean(
-    trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask,
-    *, spmv_backend,
+    trace, train_nodes, f, sigma_n2, y, obs_mask, *, strategy, spmv_backend,
 ):
     with dispatch.use_backend(spmv_backend):
         return _posterior_mean_impl(
-            trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask
+            trace, train_nodes, f, sigma_n2, y, obs_mask, strategy
         )
 
 
 def _posterior_mean_impl(
-    trace, train_nodes, f, sigma_n2, y, cg_tol, cg_iters, obs_mask
+    trace, train_nodes, f, sigma_n2, y, obs_mask, strategy
 ):
     n = trace.n_nodes
     noise = sigma_n2 if obs_mask is None else jnp.where(obs_mask > 0, sigma_n2, 1e6)
@@ -60,8 +72,7 @@ def _posterior_mean_impl(
         y = y * obs_mask
     trace_x = features.take_rows(trace, train_nodes)
     h = make_h_operator(trace_x, f, noise, n)
-    alpha = cg_solve(h, y, tol=cg_tol, max_iters=cg_iters,
-                     precond_diag=h.diag_approx()).x
+    alpha = solvers.solve(h, y, strategy).x
     return linops.khat_cross(trace, trace_x, f, n).matvec(alpha)
 
 
@@ -73,34 +84,43 @@ def pathwise_samples(
     y: jax.Array,
     key: jax.Array,
     n_samples: int = 16,
-    cg_tol: float = 1e-5,
-    cg_iters: int = 512,
+    cg_tol: float | None = None,
+    cg_iters: int | None = None,
     obs_mask: jax.Array | None = None,
-) -> jax.Array:
+    strategy: SolveStrategy | None = None,
+    return_diagnostics: bool = False,
+):
     """Draw ``n_samples`` joint posterior samples over all N nodes (Eq. 12).
 
-    Returns [N, n_samples]."""
-    return _pathwise_samples(
-        trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
-        obs_mask, spmv_backend=dispatch.get_backend(),
+    Returns [N, n_samples]; with ``return_diagnostics=True`` additionally
+    returns (iters_used, converged) of the inner CG solve — the same
+    honesty contract as the chunked variant (a maxed-out solve must be
+    visible, not silently averaged into the samples)."""
+    out = _pathwise_samples(
+        trace, train_nodes, f, sigma_n2, y, key, obs_mask,
+        n_samples=n_samples, strategy=_resolve(strategy, cg_tol, cg_iters),
+        spmv_backend=dispatch.get_backend(),
     )
+    samples, iters, converged = out
+    if return_diagnostics:
+        return samples, iters, converged
+    return samples
 
 
-@partial(jax.jit, static_argnames=("n_samples", "cg_iters", "spmv_backend"))
+@partial(jax.jit, static_argnames=("n_samples", "strategy", "spmv_backend"))
 def _pathwise_samples(
-    trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
-    obs_mask, *, spmv_backend,
+    trace, train_nodes, f, sigma_n2, y, key, obs_mask,
+    *, n_samples, strategy, spmv_backend,
 ):
     with dispatch.use_backend(spmv_backend):
         return _pathwise_samples_impl(
-            trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol,
-            cg_iters, obs_mask,
+            trace, train_nodes, f, sigma_n2, y, key, n_samples, obs_mask,
+            strategy,
         )
 
 
 def _pathwise_samples_impl(
-    trace, train_nodes, f, sigma_n2, y, key, n_samples, cg_tol, cg_iters,
-    obs_mask,
+    trace, train_nodes, f, sigma_n2, y, key, n_samples, obs_mask, strategy
 ):
     n = trace.n_nodes
     t = train_nodes.shape[0]
@@ -116,9 +136,9 @@ def _pathwise_samples_impl(
 
     trace_x = features.take_rows(trace, train_nodes)
     h = make_h_operator(trace_x, f, noise, n)
-    u = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
-                 precond_diag=h.diag_approx()).x
-    return g + linops.khat_cross(trace, trace_x, f, n).matvec(u)
+    sol = solvers.solve(h, resid, strategy)
+    samples = g + linops.khat_cross(trace, trace_x, f, n).matvec(sol.x)
+    return samples, sol.iters, jnp.all(sol.converged)
 
 
 def pathwise_samples_chunked(
@@ -133,9 +153,10 @@ def pathwise_samples_chunked(
     *,
     chunk: int = DEFAULT_CHUNK,
     n_samples: int = 16,
-    cg_tol: float = 1e-5,
-    cg_iters: int = 512,
+    cg_tol: float | None = None,
+    cg_iters: int | None = None,
     obs_mask: jax.Array | None = None,
+    strategy: SolveStrategy | None = None,
     return_diagnostics: bool = False,
 ):
     """Eq. 12 over all N nodes with the full-graph Φ *never materialised*.
@@ -148,13 +169,16 @@ def pathwise_samples_chunked(
     ``pathwise_samples`` on the monolithic trace sampled with ``walk_key``.
     Peak memory: O(chunk·K + N·n_samples) instead of O(N·K).
 
-    ``return_diagnostics=True`` additionally returns (iters_used, converged)
-    of the *actual* inner CG solve (gp/cg.CGResult fields) — benchmarks log
+    The training-block solve is a strategy solve on the *materialised*
+    Φ_x, so Nyström preconditioning works here even though the full Φ is
+    lazy.  ``return_diagnostics=True`` additionally returns
+    (iters_used, converged) of the *actual* inner CG solve — benchmarks log
     these so silent non-convergence can't skew timings; a side solve of a
     different right-hand side would not measure the same thing."""
     out = _pathwise_samples_chunked(
-        graph, train_nodes, f, sigma_n2, y, key, walk_key, cg_tol, obs_mask,
-        cfg=cfg, chunk=chunk, n_samples=n_samples, cg_iters=cg_iters,
+        graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
+        cfg=cfg, chunk=chunk, n_samples=n_samples,
+        strategy=_resolve(strategy, cg_tol, cg_iters),
         spmv_backend=dispatch.get_backend(),
     )
     samples, iters, converged = out
@@ -165,11 +189,11 @@ def pathwise_samples_chunked(
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "chunk", "n_samples", "cg_iters", "spmv_backend"),
+    static_argnames=("cfg", "chunk", "n_samples", "strategy", "spmv_backend"),
 )
 def _pathwise_samples_chunked(
-    graph, train_nodes, f, sigma_n2, y, key, walk_key, cg_tol, obs_mask,
-    *, cfg, chunk, n_samples, cg_iters, spmv_backend,
+    graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
+    *, cfg, chunk, n_samples, strategy, spmv_backend,
 ):
     with dispatch.use_backend(spmv_backend):
         n = graph.n_nodes
@@ -193,8 +217,7 @@ def _pathwise_samples_chunked(
             cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
         )
         h = make_h_operator(trace_x, f, noise, n)
-        sol = cg_solve(h, resid, tol=cg_tol, max_iters=cg_iters,
-                       precond_diag=h.diag_approx())
+        sol = solvers.solve(h, resid, strategy)
         cross = linops.chunked_khat_cross(graph, trace_x, f, walk_key, cfg,
                                           chunk)
         return g + cross.matvec(sol.x), sol.iters, jnp.all(sol.converged)

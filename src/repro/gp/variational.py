@@ -3,7 +3,16 @@
 Multi-class SVGP: C latent GPs share one GRF kernel; q(u_c) = N(μ_c, L_c L_cᵀ)
 over M inducing nodes; softmax likelihood handled by Monte-Carlo ELBO.
 Kernel blocks are assembled from sparse GRF features (K_uu, K_xu are small:
-M×M and T×M), so the per-step cost stays O((T+M)·K·M)."""
+M×M and T×M), so the per-step cost stays O((T+M)·K·M).
+
+Solver-layer note (DESIGN.md §3.8): the M×M blocks here stay *direct*
+(Cholesky) — the whitened parameterisation needs the explicit factor L_uu,
+and M sits well below the iterative-solver crossover — so this module
+constructs no CG call at all.  Its strategy-layer tie-in is the inducing
+set itself: :func:`init_inducing_pivoted` selects inducing nodes by the
+same greedy-diagonal pivot rule the Nyström preconditioner uses
+(``solvers.pivot_rows``), so SVGP inducing selection and CG preconditioning
+share one notion of "the rows that carry K̂'s energy"."""
 from __future__ import annotations
 
 import jax
@@ -13,6 +22,24 @@ from ..core import linops
 from ..core.modulation import Modulation
 from ..core.walks import WalkTrace
 from ..optim.adamw import AdamW
+from ..solvers import pivot_rows
+
+
+def init_inducing_pivoted(
+    trace: WalkTrace, f: jax.Array, n_inducing: int
+) -> jax.Array:
+    """Inducing set by Nyström pivoting: greedy residual-diagonal selection.
+
+    Returns **row indices into ``trace``** (for a full-graph trace these
+    coincide with node ids; for a sub-trace, map them through the rows that
+    built it).  The rank-M Nyström view of SVGP makes the natural inducing
+    set the same pivots the preconditioner picks — greedy *residual*
+    pivoting, which spreads the budget across correlated row clusters
+    instead of stacking onto the highest-energy one (plain top-‖φ(i)‖²
+    ranking does exactly that — see solvers/nystrom.py).  A shared rule
+    keeps "what the low-rank approximations anchor on" consistent across
+    gp/variational and solvers/nystrom."""
+    return pivot_rows(trace, f, n_inducing)
 
 
 def kernel_blocks(trace: WalkTrace, f, inducing, nodes, n_nodes, jitter=1e-4):

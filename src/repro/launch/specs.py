@@ -129,9 +129,14 @@ def build_gp_cell(mesh: Mesh, n_nodes: int = 1 << 20, n_walkers: int = 100,
 
     ``compact`` stores the trace payload as (int32 cols, bf16 loads, int8
     lens) — 7 B/slot instead of 12 (§Perf: the matvec is HBM-bound, so the
-    payload stream IS the bottleneck; MC noise ≫ bf16 rounding)."""
+    payload stream IS the bottleneck; MC noise ≫ bf16 rounding).
+
+    The solve runs under ``solvers.DRYRUN_DEFAULT`` (fixed trip count,
+    unrolled) so ``cost_analysis`` sees every CG iteration and psum in the
+    HLO — the dry-run cell rides the same strategy layer as production."""
     from ..core.walks import WalkTrace
     from ..distributed.gp_shard import sharded_cg_solve
+    from ..solvers import DRYRUN_DEFAULT
 
     k = n_walkers * (l_max + 1)
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -148,7 +153,8 @@ def build_gp_cell(mesh: Mesh, n_nodes: int = 1 << 20, n_walkers: int = 100,
 
     def fn(trace, f, b):
         return sharded_cg_solve(
-            trace, f, b, mesh, sigma_n2=0.1, max_iters=cg_iters,
+            trace, f, b, mesh, sigma_n2=0.1,
+            strategy=DRYRUN_DEFAULT.with_(max_iters=cg_iters),
             fixed_unrolled=True, compress=compress,
         )
 

@@ -9,4 +9,5 @@ from .update import (  # noqa: F401
     observe,
     observe_batch,
     refit,
+    refit_alpha,
 )

@@ -1,0 +1,33 @@
+"""The Krylov strategy layer (DESIGN.md §3.8).
+
+Every CG construction in the repo — gp/mll, gp/posterior, distributed/
+gp_shard, bo/thompson, serving/update, launch's dry-run cell and the
+benchmarks — goes through :func:`solve` under a :class:`SolveStrategy`
+instead of hand-wiring tol/iters/preconditioner literals at the call site.
+``repro.gp.cg`` remains as a deprecation shim over this package.
+"""
+from .cg import (  # noqa: F401
+    CGResult,
+    LanczosCoeffs,
+    cg_solve,
+    cg_solve_fixed,
+    jacobi_precond,
+    make_preconditioner,
+    solve,
+)
+from .nystrom import nystrom_precond, pivot_rows  # noqa: F401
+from .slq import (  # noqa: F401
+    logdet_from_coeffs,
+    rademacher,
+    slq_logdet,
+    tridiag_from_coeffs,
+)
+from .strategy import (  # noqa: F401
+    DRYRUN_DEFAULT,
+    MLL_DEFAULT,
+    POSTERIOR_DEFAULT,
+    PRECONDITIONERS,
+    SERVING_DEFAULT,
+    SHARDED_DEFAULT,
+    SolveStrategy,
+)

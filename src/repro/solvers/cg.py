@@ -1,0 +1,265 @@
+"""Batched-RHS conjugate gradients — the Krylov core behind Lemma 1.
+
+Solves H V = B for SPD ``H`` given only a matvec, with per-column scalars so
+a batch of right-hand sides (Eq. 11: [y, z_1, ..., z_S]) shares one loop.
+``lax.while_loop`` + static shapes keep it jit/pjit-compatible; the
+distributed layer reuses both loops with psum-reducing dot products.
+
+New over the old ``gp/cg.py`` (which now shims here):
+
+  * ``x0`` warm starts on both loops — consecutive Adam steps / BO refits
+    solve nearly-identical systems, and CG started at the previous solution
+    converges in however many iterations the *difference* needs.  The
+    convergence test stays relative to ‖b‖ (not ‖b − H x₀‖), so a warm
+    start can only tighten the exit, never weaken it.
+  * ``precond`` generalises ``precond_diag`` to any SPD apply M⁻¹v
+    (solvers/nystrom.py plugs in here).
+  * ``cg_solve_fixed(..., with_coeffs=True)`` records the CG recurrence
+    scalars (α_j, β_j) per column.  Those are exactly the Lanczos
+    tridiagonal of H in disguise, which is what stochastic Lanczos
+    quadrature (solvers/slq.py) integrates for log-det.
+  * :func:`solve` — the strategy entry point every consumer goes through.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .strategy import SolveStrategy
+
+
+class CGResult(NamedTuple):
+    x: jax.Array          # [N, R] solution
+    iters: jax.Array      # scalar int32 — iterations executed (iters_used)
+    resnorm: jax.Array    # [R] final residual norms
+    converged: jax.Array  # [R] bool — per-column ‖r‖ ≤ tol·‖b‖ at exit.
+    #                       A False here means the solve hit max_iters with
+    #                       that column still above tolerance; benchmarks
+    #                       must surface it (bench_walks/bench_serving/
+    #                       bench_solvers) so silent non-convergence can't
+    #                       skew timings.
+
+
+class LanczosCoeffs(NamedTuple):
+    """CG recurrence scalars per iteration and RHS column.
+
+    The Lanczos tridiagonal T of H in the Krylov basis of column j is
+    recovered as (Saad, Iterative Methods §6.7)
+
+        T[i, i]   = 1/α_i + β_{i-1}/α_{i-1}      (β_{-1}/α_{-1} := 0)
+        T[i, i+1] = √β_i / α_i
+
+    ``valid`` masks iterations executed before breakdown/convergence
+    (α_i > 0); slq.py turns masked-off rows into decoupled unit eigenvalues
+    that carry zero quadrature weight."""
+
+    alphas: jax.Array   # [iters, R]
+    betas: jax.Array    # [iters, R]
+    valid: jax.Array    # [iters, R] bool
+    bnorm2: jax.Array   # [R] — squared probe norms (quadrature weights)
+
+
+def jacobi_precond(precond_diag):
+    """M⁻¹ from a diagonal; rows with a zero diagonal (isolated nodes whose
+    diag_approx vanishes) fall back to the identity instead of dividing by
+    zero — any SPD approximation is a valid Jacobi preconditioner."""
+    if precond_diag is None:
+        return lambda v: v
+    inv = jnp.where(precond_diag > 0, 1.0 / jnp.maximum(precond_diag, 1e-30), 1.0)
+    inv = inv[:, None]
+    return lambda v: inv * v
+
+
+_jacobi = jacobi_precond
+
+
+def _init_state(matvec, b, x0, apply_m, dot):
+    """Shared warm-startable CG initialisation: (x, r, z, p, rz)."""
+    if x0 is None:
+        x = jnp.zeros_like(b)
+        r = b
+    else:
+        x = jnp.broadcast_to(
+            x0[:, None] if x0.ndim == b.ndim - 1 else x0, b.shape
+        ).astype(b.dtype)
+        r = b - matvec(x)
+    z = apply_m(r)
+    return x, r, z, z, dot(r, z)
+
+
+def cg_solve(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    tol: float = 1e-5,
+    max_iters: int = 256,
+    precond_diag: jax.Array | None = None,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
+    x0: jax.Array | None = None,
+) -> CGResult:
+    """Preconditioned CG with early exit (adaptive loop).
+
+    Args:
+      matvec: V ↦ H V on [N, R] blocks.
+      b: [N] or [N, R] right-hand sides.
+      precond_diag: optional [N] Jacobi preconditioner diagonal (M ≈ diag(H)).
+      dot: column-wise inner product ([N,R],[N,R]) → [R]; override with a
+        psum-reducing version under shard_map.
+      precond: optional full preconditioner apply v ↦ M⁻¹v on [N, R]
+        blocks (takes precedence over ``precond_diag``).
+      x0: optional warm start ([N] or [N, R]; a [N] start broadcasts over
+        the RHS batch).
+    """
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    if dot is None:
+        dot = lambda u, v: jnp.sum(u * v, axis=0)
+    apply_m = precond if precond is not None else _jacobi(precond_diag)
+
+    bnorm = jnp.sqrt(dot(b, b))
+    thresh = tol * jnp.maximum(bnorm, 1e-30)
+
+    x0_, r0, z0, p0, rz0 = _init_state(matvec, b, x0, apply_m, dot)
+
+    def cond(state):
+        _, res, _, _, _, it = state
+        return jnp.logical_and(it < max_iters, jnp.any(jnp.sqrt(dot(res, res)) > thresh))
+
+    def body(state):
+        x, res, z, p, rz, it = state
+        hp = matvec(p)
+        php = dot(p, hp)
+        alpha = jnp.where(php > 0, rz / jnp.maximum(php, 1e-30), 0.0)
+        x = x + alpha[None, :] * p
+        res_new = res - alpha[None, :] * hp
+        z_new = apply_m(res_new)
+        rz_new = dot(res_new, z_new)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p_new = z_new + beta[None, :] * p
+        return (x, res_new, z_new, p_new, rz_new, it + 1)
+
+    state = (x0_, r0, z0, p0, rz0, jnp.asarray(0, jnp.int32))
+    x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
+    out = x[:, 0] if squeeze else x
+    resnorm = jnp.sqrt(dot(res, res))
+    return CGResult(out, iters, resnorm, resnorm <= thresh)
+
+
+def cg_solve_fixed(
+    matvec: Callable[[jax.Array], jax.Array],
+    b: jax.Array,
+    iters: int,
+    precond_diag: jax.Array | None = None,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    unroll: bool = False,
+    tol: float = 1e-5,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
+    x0: jax.Array | None = None,
+    with_coeffs: bool = False,
+):
+    """Fixed-iteration CG via lax.scan (no early exit).
+
+    ``tol`` only grades the reported ``converged`` field (‖r‖ ≤ tol·‖b‖ at
+    exit) — it never changes the iteration count.
+
+    Used by the dry-run GP cell: with ``unroll=True`` every iteration appears
+    in the compiled HLO, so cost_analysis counts the real FLOPs/collectives
+    (a while-loop body is counted once regardless of trip count).
+
+    ``with_coeffs=True`` returns ``(CGResult, LanczosCoeffs)`` — the SLQ
+    path (solvers/slq.py) integrates log over the tridiagonals those
+    scalars define."""
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    if dot is None:
+        dot = lambda u, v: jnp.sum(u * v, axis=0)
+    apply_m = precond if precond is not None else _jacobi(precond_diag)
+
+    bnorm2 = dot(b, b)
+    state = _init_state(matvec, b, x0, apply_m, dot)
+
+    def body(state, _):
+        x, res, z, p, rz = state
+        hp = matvec(p)
+        php = dot(p, hp)
+        active = jnp.logical_and(php > 0, rz > 0)
+        alpha = jnp.where(active, rz / jnp.maximum(php, 1e-30), 0.0)
+        x = x + alpha[None, :] * p
+        res = res - alpha[None, :] * hp
+        z = apply_m(res)
+        rz_new = dot(res, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p = z + beta[None, :] * p
+        return (x, res, z, p, rz_new), (alpha, beta, active)
+
+    (x, res, *_), (alphas, betas, valid) = jax.lax.scan(
+        body, state, None, length=iters, unroll=iters if unroll else 1
+    )
+    out = x[:, 0] if squeeze else x
+    resnorm = jnp.sqrt(dot(res, res))
+    thresh = tol * jnp.maximum(jnp.sqrt(bnorm2), 1e-30)
+    result = CGResult(out, jnp.asarray(iters, jnp.int32), resnorm,
+                      resnorm <= thresh)
+    if with_coeffs:
+        return result, LanczosCoeffs(alphas, betas, valid, bnorm2)
+    return result
+
+
+def make_preconditioner(
+    h, strategy: SolveStrategy
+) -> Callable[[jax.Array], jax.Array] | None:
+    """Build the strategy's preconditioner apply for operator ``h``.
+
+    ``"jacobi"`` uses ``h.diag_approx()`` when the operator exposes one
+    (plain callables fall back to identity — any SPD M is valid).
+    ``"nystrom"`` requires a materialised-trace :class:`ShiftedOperator`
+    (solvers/nystrom.py documents why the psum-sharded path is excluded).
+    """
+    if strategy.preconditioner == "none":
+        return None
+    if strategy.preconditioner == "jacobi":
+        diag = h.diag_approx() if hasattr(h, "diag_approx") else None
+        return _jacobi(diag)
+    from .nystrom import nystrom_precond
+
+    return nystrom_precond(
+        h, rank=strategy.precond_rank, jitter=strategy.precond_jitter
+    )
+
+
+def solve(
+    h,
+    b: jax.Array,
+    strategy: SolveStrategy = SolveStrategy(),
+    *,
+    x0: jax.Array | None = None,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    precond: Callable[[jax.Array], jax.Array] | None = None,
+    unroll: bool = False,
+) -> CGResult:
+    """Solve H v = b under a :class:`SolveStrategy` — the one entry point.
+
+    ``h`` is an operator (callable, optionally with ``diag_approx``) or a
+    bare matvec.  ``precond`` overrides the strategy's preconditioner with a
+    prebuilt apply (reused across solves in a scan, e.g. the warm-started
+    MLL fit).  ``x0`` is honoured only when ``strategy.warm_start`` — the
+    cold/warm decision lives in the strategy, not scattered at call sites.
+    ``unroll`` only applies to the fixed loop (dry-run HLO costing).
+    """
+    if precond is None:
+        precond = make_preconditioner(h, strategy)
+    if not strategy.warm_start:
+        x0 = None
+    if strategy.adaptive:
+        return cg_solve(
+            h, b, tol=strategy.tol, max_iters=strategy.max_iters,
+            dot=dot, precond=precond, x0=x0,
+        )
+    return cg_solve_fixed(
+        h, b, iters=strategy.max_iters, dot=dot, precond=precond, x0=x0,
+        unroll=unroll, tol=strategy.tol,
+    )

@@ -1,0 +1,100 @@
+"""Stochastic Lanczos quadrature: actual log-det / LML *values* from CG.
+
+The repo's LML fit (gp/mll.py) autodiffs a surrogate whose *gradient* is
+Eq. 9 — the log-det term itself is never evaluated, so model comparison and
+the paper's LML plots were impossible.  This module recovers the value from
+machinery the stack already runs: the CG recurrence scalars (α_j, β_j) of a
+fixed-iteration solve are the Lanczos tridiagonalisation of H in disguise
+(Saad §6.7), so for Rademacher probes z with E[zzᵀ] = I,
+
+    log det H = tr(log H) = E_z[zᵀ (log H) z]
+              ≈ (1/S) Σ_i ‖z_i‖² Σ_k τ_{ik}² log θ_{ik},
+
+where (θ, τ) are the eigenpairs / first-row eigenvector weights of probe
+i's m×m tridiagonal T_i (Gauss quadrature nodes/weights for the spectral
+measure of z_i).  Per probe this costs one m-iteration CG pass (the matvecs
+dominate, O(m·T·K)) plus an O(m³) host-scale eigensolve of T — N never
+appears outside the matvec.
+
+The pass runs **unpreconditioned**: preconditioned CG coefficients
+tridiagonalise M^{-1/2} H M^{-1/2}, whose quadrature would need
+M-distributed probes (z ~ N(0, M)) to be unbiased for H — drawing those
+requires a factor of M, which Woodbury never materialises.  With the
+identity preconditioner the estimate is unbiased as-is; the strategy layer
+therefore forces ``preconditioner="none"`` on the SLQ pass regardless of
+what the solves use.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .cg import LanczosCoeffs, cg_solve_fixed
+
+
+def rademacher(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """±1 Hutchinson probes (E[zzᵀ] = I, ‖z‖² exact) — the one probe-draw
+    idiom shared by SLQ and the MLL surrogate (gp/mll.py)."""
+    return jax.random.bernoulli(key, 0.5, shape).astype(dtype) * 2.0 - 1.0
+
+
+def tridiag_from_coeffs(coeffs: LanczosCoeffs) -> jax.Array:
+    """[R, m, m] symmetric tridiagonals from per-column CG scalars.
+
+    Iterations after breakdown/convergence (``valid`` False) become
+    decoupled unit diagonal entries: e₁ has zero weight on their
+    eigenvectors, so they contribute nothing to the quadrature — the masked
+    tridiagonal is *exactly* the one the shorter Krylov chain defines."""
+    alphas, betas, valid = coeffs.alphas, coeffs.betas, coeffs.valid
+    m = alphas.shape[0]
+    a_safe = jnp.where(valid, jnp.maximum(alphas, 1e-30), 1.0)
+    ratio = jnp.where(valid, betas / a_safe, 0.0)            # β_j/α_j
+    prev = jnp.concatenate([jnp.zeros_like(ratio[:1]), ratio[:-1]], axis=0)
+    diag = jnp.where(valid, 1.0 / a_safe + prev, 1.0)        # [m, R]
+    # off[j] couples j, j+1 — live only when both iterations executed.
+    both = jnp.logical_and(valid[:-1], valid[1:])
+    off = jnp.where(
+        both, jnp.sqrt(jnp.maximum(betas[:-1], 0.0)) / a_safe[:-1], 0.0
+    )                                                         # [m-1, R]
+
+    def build(d, o):
+        t = jnp.zeros((m, m), d.dtype)
+        t = t.at[jnp.arange(m), jnp.arange(m)].set(d)
+        t = t.at[jnp.arange(m - 1), jnp.arange(1, m)].set(o)
+        t = t.at[jnp.arange(1, m), jnp.arange(m - 1)].set(o)
+        return t
+
+    return jax.vmap(build, in_axes=(1, 1))(diag, off)
+
+
+def logdet_from_coeffs(coeffs: LanczosCoeffs) -> jax.Array:
+    """Average the per-probe Gauss quadratures into the log-det estimate."""
+    tri = tridiag_from_coeffs(coeffs)                 # [R, m, m]
+    theta, vecs = jnp.linalg.eigh(tri)
+    tau2 = vecs[:, 0, :] ** 2                         # e₁ weights, [R, m]
+    quad = jnp.sum(tau2 * jnp.log(jnp.maximum(theta, 1e-12)), axis=1)
+    return jnp.mean(coeffs.bnorm2 * quad)
+
+
+def slq_logdet(
+    matvec: Callable[[jax.Array], jax.Array],
+    dim: int,
+    key: jax.Array,
+    n_probes: int = 32,
+    n_iters: int = 64,
+    dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+) -> jax.Array:
+    """log det H for SPD H given only a matvec (Hutchinson × Lanczos).
+
+    ``n_iters`` caps the Krylov depth (clamped to ``dim``); Rademacher
+    probes give ‖z‖² = dim exactly, removing one variance source.  Error is
+    O(1/√S) in probes plus the (exponentially small in m) quadrature tail —
+    32 probes × 64 iterations lands within a few percent of ``slogdet`` on
+    the 500-node acceptance graph (tests/test_solvers.py)."""
+    z = rademacher(key, (dim, n_probes))
+    _, coeffs = cg_solve_fixed(
+        matvec, z, iters=min(n_iters, dim), dot=dot, with_coeffs=True
+    )
+    return logdet_from_coeffs(coeffs)

@@ -1,0 +1,101 @@
+"""The solver strategy config — one frozen object instead of six literal sets.
+
+Before this layer every Krylov consumer (gp/mll, gp/posterior,
+gp/variational, distributed/gp_shard, bo/thompson, serving/update) hand-wired
+its own cold-started, Jacobi-only ``cg_solve`` with private tol/iters
+literals.  :class:`SolveStrategy` centralises those knobs:
+
+  * it is **hashable** (frozen dataclass of scalars), so consumers pass it
+    through ``jax.jit`` as a *static* argument — the strategy participates
+    in the jit cache key exactly like the spmv backend does, and switching
+    strategies retraces instead of silently reusing a stale loop shape;
+  * it is backend-agnostic: the same strategy drives the single-device,
+    chunked and psum-sharded CG loops (``solvers.solve`` takes the
+    distributed ``dot`` hook alongside it).
+
+See DESIGN.md §3.8 for the preconditioner cost model and the warm-start
+correctness argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PRECONDITIONERS = ("none", "jacobi", "nystrom")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveStrategy:
+    """How to run a Krylov solve of H v = b.
+
+    Attributes:
+      tol: relative residual target ‖r‖ ≤ tol·‖b‖ (per RHS column).
+      max_iters: iteration budget (exact trip count when ``adaptive=False``).
+      preconditioner: ``"none"`` | ``"jacobi"`` (diag(H) approx) |
+        ``"nystrom"`` (rank-r pivoted Nyström of K̂ via Woodbury — see
+        solvers/nystrom.py; requires a materialised-trace ShiftedOperator).
+      warm_start: consumers that hold a previous solution (Adam fit steps,
+        BO/serving refits) pass it as ``x0``; strategies with
+        ``warm_start=False`` make ``solve`` ignore any ``x0`` so cold/warm
+        behaviour is decided in one place.
+      adaptive: early-exit ``lax.while_loop`` when True; fixed-trip
+        ``lax.scan`` (dry-run / SLQ / unrolled-HLO costing) when False.
+      precond_rank: Nyström pivot count r (clamped to the system size).
+      precond_jitter: SPD jitter added to the r×r pivot Gram before its
+        Cholesky.
+    """
+
+    tol: float = 1e-5
+    max_iters: int = 256
+    preconditioner: str = "jacobi"
+    warm_start: bool = False
+    adaptive: bool = True
+    precond_rank: int = 64
+    precond_jitter: float = 1e-6
+
+    def __post_init__(self):
+        if self.preconditioner not in PRECONDITIONERS:
+            raise ValueError(
+                f"unknown preconditioner {self.preconditioner!r}; "
+                f"valid: {PRECONDITIONERS}"
+            )
+        if self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+        if self.precond_rank < 1:
+            raise ValueError(
+                f"precond_rank must be >= 1, got {self.precond_rank}"
+            )
+
+    def with_(self, **updates) -> "SolveStrategy":
+        """Functional update (strategies are frozen)."""
+        return dataclasses.replace(self, **updates)
+
+    def with_overrides(
+        self,
+        tol: float | None = None,
+        max_iters: int | None = None,
+        adaptive: bool | None = None,
+    ) -> "SolveStrategy":
+        """Fold legacy per-call-site literals into this strategy.
+
+        ``None`` means "keep the strategy's value" — the one shim helper
+        every consumer's deprecated ``cg_tol``/``cg_iters`` kwargs route
+        through (duplicating this fold at call sites is how the six
+        divergent literal sets happened in the first place)."""
+        updates = {}
+        if tol is not None:
+            updates["tol"] = float(tol)
+        if max_iters is not None:
+            updates["max_iters"] = int(max_iters)
+        if adaptive is not None:
+            updates["adaptive"] = bool(adaptive)
+        return dataclasses.replace(self, **updates) if updates else self
+
+
+# The literal sets the six call sites used to hand-wire, now named.  Keeping
+# them here (not at the call sites) is the point of the refactor: changing a
+# default retraces every consumer consistently.
+MLL_DEFAULT = SolveStrategy(tol=1e-4, max_iters=256, warm_start=True)
+POSTERIOR_DEFAULT = SolveStrategy(tol=1e-5, max_iters=512)
+SHARDED_DEFAULT = SolveStrategy(tol=1e-5, max_iters=256)
+SERVING_DEFAULT = SolveStrategy(tol=1e-6, max_iters=128, warm_start=True)
+DRYRUN_DEFAULT = SolveStrategy(max_iters=64, adaptive=False)
