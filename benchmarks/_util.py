@@ -17,20 +17,26 @@ def timeit(fn, reps: int = 1) -> float:
     return timeit_result(fn, reps)[0]
 
 
-def timeit_result(fn, reps: int = 1):
+def timeit_result(fn, reps: int = 1, best: bool = False):
     """(seconds per call, last call's result) — same discipline as timeit.
 
     For benches that must also *read* the timed call's output (e.g. the CG
     iters_used/converged diagnostics) without paying an extra run of a
-    multi-second workload."""
+    multi-second workload.  ``best=True`` blocks per rep and returns the
+    minimum instead of the mean — the right estimator when a *blocking*
+    gate compares two rows on a shared CI runner (contention only ever adds
+    time, so min-of-reps converges on the true cost from one side)."""
     import time
 
     jax.block_until_ready(fn())
-    t0 = time.perf_counter()
+    times = []
+    out = None
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps, out
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return (min(times) if best else sum(times) / len(times)), out
 
 
 def bench_main(run) -> None:

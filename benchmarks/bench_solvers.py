@@ -4,22 +4,32 @@ The acceptance numbers for the solvers/ layer at N ∈ {1e4, 1e5, 1e6} on a
 clustered training block (T = 4√N contiguous ring nodes — heavily
 overlapping walks, the regime solve-heavy kernels create) at σ_n² = 1e-2:
 
-  * ``solve/{none,jacobi,nystrom}/N*``   cold strategy solves of
+  * ``solve/{none,jacobi,nystrom,auto}/N*``   cold strategy solves of
     H v = b: wall-clock in ``results``, iteration counts in ``iters``,
-    per-solve convergence in ``converged``.  Acceptance: nystrom ≥2× fewer
-    iterations than jacobi at N=1e5.
-  * ``solve_warm/jacobi/N*``  the same system after a simulated
-    hyperparameter drift (f ← 1.02·f), warm-started from the pre-drift
-    solution vs cold — the BO/serving refit shape.
+    per-solve convergence in ``converged``, and the Nyström rank the solve
+    actually ran with in ``precond_ranks`` (what "auto" chose).
+    Acceptance (ISSUE 6): the headline gate is **wall-clock** — the
+    ``time_ratios`` keys ``{nystrom,auto}_vs_jacobi/N*`` (jacobi_ms /
+    strategy_ms, > 1 means the preconditioner wins) must beat Jacobi for at
+    least one N.  Iteration ratios remain informational.
+  * ``solve_bf16/{jacobi,nystrom}/N*``  the same cold solves under
+    ``matvec_dtype="bfloat16"`` (payload loads in bf16, CG recurrence f32).
+    All must converge, and the median ``time_ratios["bf16_vs_f32/..."]``
+    (bf16_ms / f32_ms, within this artifact — same host, same run) must not
+    exceed the gate's --bf16-threshold.
+  * ``solve_warm/jacobi/N*`` and the now-*timed* ``solve_cold/jacobi/N*``:
+    the same system after a simulated hyperparameter drift (f ← 1.02·f),
+    warm-started from the pre-drift solution vs cold — the BO/serving refit
+    shape, with wall-clock for both sides of the comparison.
   * ``fit50/{cold,warm}/N1e5``  a 50-step MLL fit, cold-started vs the
     warm-started strategy (probes frozen per chunk, [v_y, v_z] carried
     through the scan).  Acceptance: warm ≥1.5× fewer TOTAL CG iterations.
 
-``iters`` and ``converged`` ride outside ``results`` so the CI timing gate
-only compares like-for-like wall-clocks; ``check_regression.py`` gates on
-them separately (blocking: any converged=False, or an iteration count
-regressing >1.5× vs the committed baseline).  The headline ratios land in
-``iteration_ratios``.
+``iters``, ``converged``, ``precond_ranks`` and ``time_ratios`` ride
+outside ``results`` so the CI timing gate only compares like-for-like
+wall-clocks; ``check_regression.py`` gates on them separately (blocking:
+any converged=False; any artifact carrying ``time_ratios`` is gated on the
+wall-clock ratios above *instead of* the old iteration-ratio rule).
 """
 from __future__ import annotations
 
@@ -41,7 +51,11 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_solvers.json")
 SIGMA_N2 = 1e-2               # the acceptance operating point
 TOL = 1e-6
 MAX_ITERS = 3000
-RANK = 256                    # Nyström pivot budget
+# Nyström pivot budget for the static rows.  128 is the measured wall-clock
+# argmin on the bench host at N=1e4 (the jitted pivoted-Cholesky setup is
+# ~1.4 ms/rank, so 256 overshoots: 49 iters can't amortise 2× the setup of
+# 128's 102 iters) — and it is what the auto strategy picks there.
+RANK = 128
 FIT_N = 100_000               # the 50-step fit runs at the acceptance size
 FIT_STEPS = 50
 
@@ -65,7 +79,8 @@ def run(fast: bool = True):
              "log_sigma_f": jnp.log(jnp.asarray(25.0))})
     key = jax.random.PRNGKey(0)
 
-    rows, table, iters_tab, conv_tab, ratios = [], {}, {}, {}, {}
+    rows, table, iters_tab, conv_tab = [], {}, {}, {}
+    ratios, t_ratios, ranks_tab = {}, {}, {}
 
     for n in sizes:
         graph = generators.ring(n, k=3)
@@ -80,29 +95,71 @@ def run(fast: bool = True):
             np.random.default_rng(n).standard_normal(t), jnp.float32
         )
 
+        # min-of-2 for the rows the blocking wall-clock gate compares
+        # (CI-runner contention only ever adds time); single rep at N=1e6
+        # where a second solve would cost minutes.
+        reps = 2 if n <= 100_000 else 1
+
         sol_cache = {}
-        for pc in ("none", "jacobi", "nystrom"):
+        for pc in ("none", "jacobi", "nystrom", "auto"):
             st = solvers.SolveStrategy(
                 tol=TOL, max_iters=MAX_ITERS, preconditioner=pc,
                 precond_rank=RANK,
             )
-            sec, res = timeit_result(lambda st=st: solvers.solve(h, b, st))
+            # "auto" re-resolves (probe included) inside the timed call —
+            # the measurement charges the strategy its full cold cost.
+            sec, res = timeit_result(
+                lambda st=st: solvers.solve(h, b, st), reps=reps, best=True
+            )
             ms = sec * 1e3
             sol_cache[pc] = res
             table[f"solve/{pc}/N{n}"] = ms
             iters_tab[f"solve/{pc}/N{n}"] = int(res.iters)
             conv_tab[f"solve/{pc}/N{n}"] = bool(jnp.all(res.converged))
+            ranks_tab[f"solve/{pc}/N{n}"] = int(res.precond_rank)
             rows.append(dict(name=f"solvers_solve_{pc}_N{n}",
                              us_per_call=f"{ms * 1e3:.0f}", N=n, T=t,
                              iters=int(res.iters),
+                             rank=int(res.precond_rank),
                              converged=bool(jnp.all(res.converged))))
         ratios[f"nystrom_vs_jacobi/N{n}"] = round(
             iters_tab[f"solve/jacobi/N{n}"]
             / max(iters_tab[f"solve/nystrom/N{n}"], 1), 2,
         )
+        for pc in ("nystrom", "auto"):
+            t_ratios[f"{pc}_vs_jacobi/N{n}"] = round(
+                table[f"solve/jacobi/N{n}"]
+                / max(table[f"solve/{pc}/N{n}"], 1e-9), 3,
+            )
+
+        # Mixed-precision rows: bf16 payload loads, f32 recurrence.  The
+        # bf16_vs_f32 ratio compares against this run's own f32 row (same
+        # host, same cache state) so the gate isn't CI-runner roulette.
+        for pc in ("jacobi", "nystrom"):
+            st16 = solvers.SolveStrategy(
+                tol=TOL, max_iters=MAX_ITERS, preconditioner=pc,
+                precond_rank=RANK, matvec_dtype="bfloat16",
+            )
+            sec, res = timeit_result(
+                lambda st16=st16: solvers.solve(h, b, st16),
+                reps=reps, best=True,
+            )
+            ms = sec * 1e3
+            table[f"solve_bf16/{pc}/N{n}"] = ms
+            iters_tab[f"solve_bf16/{pc}/N{n}"] = int(res.iters)
+            conv_tab[f"solve_bf16/{pc}/N{n}"] = bool(jnp.all(res.converged))
+            t_ratios[f"bf16_vs_f32/{pc}/N{n}"] = round(
+                ms / max(table[f"solve/{pc}/N{n}"], 1e-9), 3
+            )
+            rows.append(dict(name=f"solvers_solve_bf16_{pc}_N{n}",
+                             us_per_call=f"{ms * 1e3:.0f}", N=n, T=t,
+                             iters=int(res.iters),
+                             converged=bool(jnp.all(res.converged))))
 
         # Warm start across a simulated hyperparameter drift (refit shape):
-        # the pre-drift solution seeds the post-drift solve.
+        # the pre-drift solution seeds the post-drift solve.  The cold side
+        # is *timed* too — warm-vs-cold is a wall-clock claim, not just an
+        # iteration-count one.
         f2 = f * 1.02
         h2 = linops.shifted(trace_x, f2, jnp.asarray(SIGMA_N2), n)
         st_warm = solvers.SolveStrategy(
@@ -116,11 +173,18 @@ def run(fast: bool = True):
         table[f"solve_warm/jacobi/N{n}"] = ms
         iters_tab[f"solve_warm/jacobi/N{n}"] = int(res_w.iters)
         conv_tab[f"solve_warm/jacobi/N{n}"] = bool(jnp.all(res_w.converged))
-        res_c = solvers.solve(h2, b, st_warm.with_(warm_start=False))
+        sec_c, res_c = timeit_result(
+            lambda: solvers.solve(h2, b, st_warm.with_(warm_start=False))
+        )
+        ms_c = sec_c * 1e3
+        table[f"solve_cold/jacobi/N{n}"] = ms_c
         iters_tab[f"solve_cold/jacobi/N{n}"] = int(res_c.iters)
         conv_tab[f"solve_cold/jacobi/N{n}"] = bool(jnp.all(res_c.converged))
         ratios[f"warm_vs_cold_solve/N{n}"] = round(
             int(res_c.iters) / max(int(res_w.iters), 1), 2
+        )
+        t_ratios[f"warm_vs_cold_solve/N{n}"] = round(
+            ms_c / max(ms, 1e-9), 3
         )
         rows.append(dict(name=f"solvers_solve_warm_N{n}",
                          us_per_call=f"{ms * 1e3:.0f}", N=n,
@@ -167,6 +231,8 @@ def run(fast: bool = True):
         "walk_config": dict(n_walkers=cfg.n_walkers, p_halt=cfg.p_halt,
                             l_max=cfg.l_max),
         "iteration_ratios": ratios,
+        "time_ratios": t_ratios,
+        "precond_ranks": ranks_tab,
         "iters": iters_tab,
         "converged": conv_tab,
         "results": table,

@@ -7,10 +7,19 @@ Two modes, matching the two CI steps (DESIGN.md §3.6):
     keep every correctness-class key the baseline has (schema stability —
     a silently dropped benchmark row is how hot paths rot).  Artifacts that
     carry a ``converged`` table (BENCH_solvers.json) additionally fail on
-    any False entry, and ones carrying an ``iters`` table fail on any
-    iteration count regressing more than --iters-threshold (default 1.5×)
-    vs the baseline — CG iteration blow-ups are correctness-class, not
-    timing jitter.  Exit 1 on any violation.
+    any False entry.  Artifacts carrying a ``time_ratios`` table (ISSUE 6)
+    are gated on *wall-clock*: at least one ``{nystrom,auto}_vs_jacobi/*``
+    ratio must exceed 1.0 (the preconditioner must actually win somewhere —
+    the headline claim of the Woodbury kernel), and the *median*
+    ``bf16_vs_f32/*`` ratio must stay at or below --bf16-threshold (default
+    1.25× — mixed precision must not *cost* wall-clock; the median over the
+    backend×size grid, not the per-key max, because single-key jitter on
+    shared CPU runners is ±30% while a real software-conversion pathology
+    shifts every key ~2×).  These within-artifact ratios
+    replace the old cross-artifact iteration-ratio rule for such artifacts;
+    legacy artifacts without ``time_ratios`` keep failing on any iteration
+    count regressing more than --iters-threshold (default 1.5×) vs the
+    baseline.  Exit 1 on any violation.
   * ``--mode timing`` (informational, the CI step wraps it in
     continue-on-error): per shared key print the fresh/baseline ratio and
     exit 1 if the *median* ratio exceeds --threshold (default 2×).  The
@@ -37,7 +46,11 @@ def _load(path: str) -> dict:
 
 
 def check_correctness(
-    baseline: dict, fresh: dict, label: str, iters_threshold: float = 1.5
+    baseline: dict,
+    fresh: dict,
+    label: str,
+    iters_threshold: float = 1.5,
+    bf16_threshold: float = 1.25,
 ) -> list[str]:
     errors = []
     results = fresh.get("results")
@@ -75,6 +88,28 @@ def check_correctness(
                 f"{label}: convergence rows dropped vs baseline: "
                 f"{sorted(dropped_conv)}"
             )
+
+    time_ratios = fresh.get("time_ratios")
+    if time_ratios is not None:
+        # Wall-clock gate (ISSUE 6): within-artifact ratios — same host,
+        # same run — so they are meaningful even on shared CI runners.
+        wins = {k: v for k, v in time_ratios.items()
+                if k.startswith(("nystrom_vs_jacobi/", "auto_vs_jacobi/"))}
+        if wins and not any(v > 1.0 for v in wins.values()):
+            errors.append(
+                f"{label}: preconditioned CG never beats Jacobi wall-clock: "
+                + ", ".join(f"{k}={v}" for k, v in sorted(wins.items()))
+            )
+        bf16 = [v for k, v in time_ratios.items()
+                if k.startswith("bf16_vs_f32/")]
+        if bf16 and statistics.median(bf16) > bf16_threshold:
+            errors.append(
+                f"{label}: bf16 matvecs cost wall-clock: median ratio "
+                f"{statistics.median(bf16):.3f} (> {bf16_threshold}x) over "
+                f"{len(bf16)} configurations"
+            )
+    elif baseline.get("host_backend") == fresh.get("host_backend"):
+        # Legacy artifacts (no wall-clock ratios): gate on iteration counts.
         for key in sorted(set(base_iters) & set(fresh_iters)):
             b, f = base_iters[key], fresh_iters[key]
             if isinstance(b, (int, float)) and b > 0 and f > b * iters_threshold:
@@ -112,6 +147,7 @@ def main() -> int:
                         metavar="BASELINE:FRESH")
     parser.add_argument("--threshold", type=float, default=2.0)
     parser.add_argument("--iters-threshold", type=float, default=1.5)
+    parser.add_argument("--bf16-threshold", type=float, default=1.25)
     args = parser.parse_args()
 
     failed = False
@@ -126,7 +162,8 @@ def main() -> int:
             continue
         if args.mode == "correctness":
             errors = check_correctness(baseline, fresh, label,
-                                       args.iters_threshold)
+                                       args.iters_threshold,
+                                       args.bf16_threshold)
             for err in errors:
                 print(err)
             failed = failed or bool(errors)

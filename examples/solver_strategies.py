@@ -1,10 +1,12 @@
 """Solver strategy layer quickstart (DESIGN.md §3.8) — also the CI smoke.
 
-One clustered GP training block, solved under the three preconditioners and
-a warm start, plus an SLQ-based exact LML — every path through
-``repro.solvers.solve``/``SolveStrategy``.  Exits non-zero if any solve
-fails to converge or the solutions disagree, so the CI backend matrix
-(xla / pallas-interpret) can use it as a cheap end-to-end gate.
+One clustered GP training block, solved under every preconditioner
+(including ``"auto"``, whose spectrally-probed rank choice is printed), a
+mixed-precision (bf16-payload) solve, and a warm start, plus an SLQ-based
+exact LML — every path through ``repro.solvers.solve``/``SolveStrategy``.
+Exits non-zero if any solve fails to converge or the solutions disagree, so
+the CI backend matrix (xla / pallas-interpret) can use it as a cheap
+end-to-end gate.
 
     PYTHONPATH=src python examples/solver_strategies.py --nodes 5000
 """
@@ -54,7 +56,21 @@ def main() -> int:
         conv = bool(jnp.all(res.converged))
         ok &= conv
         sols[pc] = np.array(res.x)
-        print(f"{pc:>8}: iters={int(res.iters):4d} converged={conv}")
+        print(f"{pc:>8}: iters={int(res.iters):4d} converged={conv}"
+              + (f" rank={int(res.precond_rank)}" if pc == "auto" else ""))
+
+    # Mixed precision: bf16 payload matvecs, f32 recurrence — must reach the
+    # same fixed point (rel err is κ·bf16-eps-scale, loose tolerance below).
+    bf16 = solvers.solve(
+        h, y, solvers.SolveStrategy(tol=1e-6, max_iters=2000,
+                                    preconditioner="jacobi",
+                                    precond_rank=args.rank,
+                                    matvec_dtype="bfloat16"),
+    )
+    conv = bool(jnp.all(bf16.converged))
+    ok &= conv
+    sols["bf16"] = np.array(bf16.x)
+    print(f"{'bf16':>8}: iters={int(bf16.iters):4d} converged={conv}")
 
     warm = solvers.solve(
         h, y, solvers.SolveStrategy(tol=1e-6, max_iters=2000,
@@ -66,7 +82,16 @@ def main() -> int:
     ok &= bool(jnp.all(warm.converged)) and int(warm.iters) <= 3
 
     for pc, x in sols.items():
-        if not np.allclose(sols["none"], x, rtol=5e-3, atol=5e-3):
+        if pc == "bf16":
+            # bf16 payloads perturb the *operator*, not just the solve — the
+            # fixed point moves by O(κ·2⁻⁸), so the check is norm-relative.
+            rel = np.linalg.norm(x - sols["none"]) / np.linalg.norm(
+                sols["none"]
+            )
+            if rel > 5e-2:
+                print(f"MISMATCH: bf16 rel err {rel:.3f} vs unpreconditioned")
+                ok = False
+        elif not np.allclose(sols["none"], x, rtol=5e-3, atol=5e-3):
             print(f"MISMATCH: {pc} disagrees with unpreconditioned solve")
             ok = False
 

@@ -213,6 +213,21 @@ def thompson_sampling(
                 )
             else:
                 trace_x = features.take_rows(trace, x_all)
+            if "auto" in (fit_strategy.preconditioner,
+                          sample_strategy.preconditioner):
+                # Resolve "auto" ONCE per run, on the first refit round's
+                # operator — T is the static buffer capacity and later
+                # rounds only flip mask slots, so the measured rank keeps
+                # its meaning; re-probing every round would re-pay the
+                # measurement for nothing.
+                h0 = mll.make_h_operator(
+                    trace_x, mod(state.params["mod"]),
+                    jnp.where(mask > 0, mll.noise_var(state.params), 1e6), n,
+                )
+                fit_strategy = solvers.resolve_strategy(h0, fit_strategy)
+                sample_strategy = solvers.resolve_strategy(
+                    h0, sample_strategy
+                )
             res = mll.fit_hyperparams(
                 trace_x, mod, y_n, n, jax.random.fold_in(key, 1000 + t),
                 steps=refit_steps, lr=0.05, init_params=state.params,
@@ -332,6 +347,14 @@ def thompson_sampling_incremental(
                     graph, jnp.asarray(state.x_buf), walk_key,
                     walk.n_walkers, walk.p_halt, walk.l_max, walk.reweight,
                 )
+                if fit_strategy.preconditioner == "auto":
+                    # Same once-per-run resolution as thompson_sampling.
+                    h0 = mll.make_h_operator(
+                        trace_x, mod(state.params["mod"]),
+                        jnp.where(mask > 0, mll.noise_var(state.params),
+                                  1e6), n,
+                    )
+                    fit_strategy = solvers.resolve_strategy(h0, fit_strategy)
                 res = mll.fit_hyperparams(
                     trace_x, mod, y_n, n, jax.random.fold_in(key, 1000 + t),
                     steps=refit_steps, lr=0.05, init_params=state.params,

@@ -88,6 +88,13 @@ class PhiOperator:
             features.take_rows(self.trace, rows), self.f, self.n_nodes
         )
 
+    def with_matvec_dtype(self, dtype: str) -> "PhiOperator":
+        """Payload-precision variant: casting ``f`` makes the whole ELL
+        payload (loads ⊙ f, see features.feature_values) stream in ``dtype``
+        while every dispatched product still accumulates in f32 — the
+        bf16-loads/f32-math contract (SolveStrategy.matvec_dtype)."""
+        return dataclasses.replace(self, f=self.f.astype(dtype))
+
     __call__ = matvec
 
     def tree_flatten(self):
@@ -164,6 +171,11 @@ class ChunkedPhiOperator:
             "trace with the same key and use PhiOperator.dense()."
         )
 
+    def with_matvec_dtype(self, dtype: str) -> "ChunkedPhiOperator":
+        """Same payload-precision contract as PhiOperator.with_matvec_dtype
+        (the chunked drivers build each block's payload at ``f``'s dtype)."""
+        return dataclasses.replace(self, f=self.f.astype(dtype))
+
     __call__ = matvec
 
     def tree_flatten(self):
@@ -234,6 +246,17 @@ class KhatOperator:
     def dense(self) -> jax.Array:
         return self.rows.dense() @ self.cols.dense().T
 
+    def with_matvec_dtype(self, dtype: str) -> "KhatOperator":
+        """Cast both factors' payloads; the square case keeps rows/cols as
+        one shared object (identity matters to the Nyström eligibility
+        check in solvers/nystrom.py)."""
+        rows = self.rows.with_matvec_dtype(dtype)
+        cols = (
+            rows if self.cols is self.rows
+            else self.cols.with_matvec_dtype(dtype)
+        )
+        return KhatOperator(rows, cols, self.reduce)
+
     __call__ = matvec
 
     def tree_flatten(self):
@@ -283,6 +306,14 @@ class ShiftedOperator:
         if self.mask is not None:
             k = self.mask[:, None] * k * self.mask[None, :]
         return k + jnp.diag(jnp.broadcast_to(self.noise, (t,)))
+
+    def with_matvec_dtype(self, dtype: str) -> "ShiftedOperator":
+        """Payload-precision variant of H: only K̂'s ELL payload changes
+        dtype — the noise/mask diagonal arithmetic stays in f32, as does
+        every product output (bf16-loads/f32-math)."""
+        return dataclasses.replace(
+            self, khat=self.khat.with_matvec_dtype(dtype)
+        )
 
     __call__ = matvec
 

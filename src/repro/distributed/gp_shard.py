@@ -93,6 +93,11 @@ def _resolve(strategy, tol, max_iters, adaptive=True) -> SolveStrategy:
     """Fold legacy per-call-site literals into a sharded-default strategy."""
     if strategy is None:
         strategy = solvers.SHARDED_DEFAULT
+    if strategy.preconditioner == "auto":
+        # The Nyström factor columns span shards, so the auto path has no
+        # candidate but Jacobi here — resolve before entering shard_map
+        # rather than relying on the in-trace fallback.
+        strategy = strategy.with_(preconditioner="jacobi")
     return strategy.with_overrides(
         tol=tol, max_iters=max_iters, adaptive=False if not adaptive else None
     )

@@ -1,29 +1,51 @@
 """Deprecation shim — the Krylov stack moved to :mod:`repro.solvers`.
 
 ``from repro.gp.cg import cg_solve`` keeps working (with a
-``DeprecationWarning`` at call time) so downstream code migrates at its own
-pace; new code should use ``repro.solvers.solve`` under a
+``DeprecationWarning`` the *first* time any shimmed entry point runs — once
+per process, not per call, so hot loops that still route through the shim
+don't drown real warnings) so downstream code migrates at its own pace; new
+code should use ``repro.solvers.solve`` under a
 :class:`repro.solvers.SolveStrategy` (or the low-level ``cg_solve`` /
-``cg_solve_fixed`` re-exported there)."""
+``cg_solve_fixed`` re-exported there).
+
+The strategy surface is re-exported too — including the ISSUE 6 additions
+(``SolveStrategy.matvec_dtype``, the ``"auto"`` preconditioner machinery
+``resolve_strategy``/``select_rank`` and the ``AUTO_RANKS``/
+``MATVEC_DTYPES``/``DEFAULT_PRECOND_RANK`` constants) — so code pinned to
+the old import path sees the same API as :mod:`repro.solvers`."""
 from __future__ import annotations
 
 import functools
 import warnings
 
-from ..solvers import CGResult  # noqa: F401  (re-export, unchanged API)
+from ..solvers import (  # noqa: F401  (re-exports, unchanged API)
+    AUTO_RANKS,
+    CGResult,
+    DEFAULT_PRECOND_RANK,
+    MATVEC_DTYPES,
+    PRECONDITIONERS,
+    SolveStrategy,
+    resolve_strategy,
+    select_rank,
+)
 from ..solvers import cg as _cg
+
+_WARNED = False
 
 
 def _deprecated(fn):
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
-        warnings.warn(
-            f"repro.gp.cg.{fn.__name__} is deprecated; use "
-            f"repro.solvers.{fn.__name__} (or repro.solvers.solve with a "
-            "SolveStrategy)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
+        global _WARNED
+        if not _WARNED:
+            _WARNED = True
+            warnings.warn(
+                f"repro.gp.cg.{fn.__name__} is deprecated; use "
+                f"repro.solvers.{fn.__name__} (or repro.solvers.solve with a "
+                "SolveStrategy)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         return fn(*args, **kwargs)
 
     return wrapper

@@ -235,6 +235,16 @@ def fit_hyperparams(
     opt_state = opt.init(params)
     if obs_mask is None:
         obs_mask = jnp.ones_like(y)
+    if strategy.preconditioner == "auto":
+        # Resolve on the initial hyperparameters, eagerly — inside
+        # _fit_chunk's trace the probe can't run and auto would silently
+        # degrade to Jacobi.  The measured rank is reused for every step
+        # (H only drifts by hyperparameter updates between steps).
+        f0 = mod(params["mod"])
+        s2 = jnp.where(obs_mask > 0, noise_var(params), 1e6)
+        strategy = solvers.resolve_strategy(
+            make_h_operator(trace_x, f0, s2, n_nodes), strategy, key=k_init
+        )
     v = jnp.zeros((y.shape[0], 1 + n_probes), jnp.float32)
 
     history = []
@@ -294,6 +304,15 @@ def exact_lml(
     value is untrustworthy — surface it, don't average over it)."""
     if strategy is None:
         strategy = solvers.MLL_DEFAULT.with_(warm_start=False)
+    if strategy.preconditioner == "auto":
+        if obs_mask is None:
+            h0 = make_h_operator(trace_x, f, sigma_n2, n_nodes)
+        else:
+            h0 = linops.ShiftedOperator(
+                linops.khat(trace_x, f, n_nodes),
+                jnp.where(obs_mask > 0, sigma_n2, 1.0), mask=obs_mask,
+            )
+        strategy = solvers.resolve_strategy(h0, strategy, key=key)
     return _exact_lml(
         trace_x, f, sigma_n2, y, obs_mask, key,
         strategy=strategy, n_probes=n_probes, slq_iters=slq_iters,

@@ -29,6 +29,23 @@ def _resolve(strategy, cg_tol, cg_iters) -> SolveStrategy:
     return strategy.with_overrides(tol=cg_tol, max_iters=cg_iters)
 
 
+def _resolve_auto(strategy, trace_x, f, sigma_n2, obs_mask, n):
+    """Resolve ``preconditioner="auto"`` *before* the jit boundary.
+
+    The jitted impls rebuild H from the same pieces; resolving on an
+    eagerly-built copy here is what lets auto pick a measured rank (inside
+    the trace it could only fall back to Jacobi)."""
+    if strategy.preconditioner != "auto":
+        return strategy
+    noise = (
+        sigma_n2 if obs_mask is None
+        else jnp.where(obs_mask > 0, sigma_n2, 1e6)
+    )
+    return solvers.resolve_strategy(
+        make_h_operator(trace_x, f, noise, n), strategy
+    )
+
+
 def posterior_mean(
     trace: WalkTrace,
     train_nodes: jax.Array,
@@ -46,9 +63,14 @@ def posterior_mean(
     # The spmv backend resolves at trace time, so it must be part of the jit
     # cache key — resolve it *outside* the jitted impl and pass it static.
     # The strategy is static for the same reason (it shapes the CG loop).
+    strategy = _resolve(strategy, cg_tol, cg_iters)
+    strategy = _resolve_auto(
+        strategy, features.take_rows(trace, train_nodes), f, sigma_n2,
+        obs_mask, trace.n_nodes,
+    )
     return _posterior_mean(
         trace, train_nodes, f, sigma_n2, y, obs_mask,
-        strategy=_resolve(strategy, cg_tol, cg_iters),
+        strategy=strategy,
         spmv_backend=dispatch.get_backend(),
     )
 
@@ -96,9 +118,14 @@ def pathwise_samples(
     returns (iters_used, converged) of the inner CG solve — the same
     honesty contract as the chunked variant (a maxed-out solve must be
     visible, not silently averaged into the samples)."""
+    strategy = _resolve(strategy, cg_tol, cg_iters)
+    strategy = _resolve_auto(
+        strategy, features.take_rows(trace, train_nodes), f, sigma_n2,
+        obs_mask, trace.n_nodes,
+    )
     out = _pathwise_samples(
         trace, train_nodes, f, sigma_n2, y, key, obs_mask,
-        n_samples=n_samples, strategy=_resolve(strategy, cg_tol, cg_iters),
+        n_samples=n_samples, strategy=strategy,
         spmv_backend=dispatch.get_backend(),
     )
     samples, iters, converged = out
@@ -175,10 +202,21 @@ def pathwise_samples_chunked(
     (iters_used, converged) of the *actual* inner CG solve — benchmarks log
     these so silent non-convergence can't skew timings; a side solve of a
     different right-hand side would not measure the same thing."""
+    strategy = _resolve(strategy, cg_tol, cg_iters)
+    if strategy.preconditioner == "auto":
+        # The counter-based walker RNG makes this eager trace row-identical
+        # to the one the jitted impl samples.
+        trace_x = walks.sample_walks_for_nodes(
+            graph, train_nodes, walk_key,
+            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
+        )
+        strategy = _resolve_auto(
+            strategy, trace_x, f, sigma_n2, obs_mask, graph.n_nodes
+        )
     out = _pathwise_samples_chunked(
         graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
         cfg=cfg, chunk=chunk, n_samples=n_samples,
-        strategy=_resolve(strategy, cg_tol, cg_iters),
+        strategy=strategy,
         spmv_backend=dispatch.get_backend(),
     )
     samples, iters, converged = out

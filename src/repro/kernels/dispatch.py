@@ -149,6 +149,22 @@ def gram_block(
     )
 
 
+def woodbury_apply(b, dinv, einv, v, *, backend: str | None = None):
+    """M⁻¹v = D⁻¹v − D⁻¹B E⁻¹ BᵀD⁻¹v — the Nyström–Woodbury apply, fused
+    on Pallas backends.
+
+    All preconditioner operands (B, D⁻¹, E⁻¹) are loop-invariant across a
+    CG solve; the kernel keeps the [r, R] rank-space intermediate and the
+    r×r inverse capacitance VMEM-resident so the per-iteration apply is one
+    pass instead of a chain of re-materialised XLA ops."""
+    backend = _check(backend) if backend is not None else get_backend()
+    from .woodbury_apply import ops
+
+    if backend == "xla":
+        return ops.woodbury_xla(b, dinv, einv, v)
+    return ops.woodbury_pallas(b, dinv, einv, v, interpret=_interpret(backend))
+
+
 def walk_sample(
     neighbors, weights, deg, nodes, seed,
     *, n_walkers: int, p_halt: float, l_max: int, reweight: bool = True,

@@ -41,7 +41,9 @@ def _khat_kernel(vals_s_ref, cols_s_ref, v_ref, vals_g_ref, cols_g_ref,
 
     @pl.when(phase == 0)
     def _scatter():
-        vals = vals_s_ref[:]                 # [BM, Ks]
+        # bf16 payloads stream at half bandwidth and upcast here — the
+        # scatter/gather arithmetic and the resident u are always f32.
+        vals = vals_s_ref[:].astype(jnp.float32)   # [BM, Ks]
         cols = cols_s_ref[:].reshape(-1)
         v = v_ref[:]                         # [BM] or [BM, R]
         if v.ndim == 1:
@@ -55,7 +57,7 @@ def _khat_kernel(vals_s_ref, cols_s_ref, v_ref, vals_g_ref, cols_g_ref,
 
     @pl.when(phase == 1)
     def _gather():
-        vals = vals_g_ref[:]                 # [BM, Kg]
+        vals = vals_g_ref[:].astype(jnp.float32)   # [BM, Kg]
         cols = cols_g_ref[:]
         u = u_ref[:]                         # [N] or [N, R], resident
         gathered = jnp.take(u, cols, axis=0)
@@ -97,9 +99,15 @@ def khat_matvec_fused(
     bm = min(block_m, max(8, max(mg, ms)))
     nb = -(-max(mg, ms) // bm)               # ceil-div: shared phase length
     rows = nb * bm
-    vals_g = _pad_rows(vals_rows.astype(jnp.float32), rows)
+
+    def _payload(a):
+        # bf16 payloads pass through (upcast happens in-kernel, so the HBM
+        # stream stays half-width); everything else normalises to f32.
+        return a if a.dtype == jnp.bfloat16 else a.astype(jnp.float32)
+
+    vals_g = _pad_rows(_payload(vals_rows), rows)
     cols_g = _pad_rows(cols_rows, rows)
-    vals_s = _pad_rows(vals_cols.astype(jnp.float32), rows)
+    vals_s = _pad_rows(_payload(vals_cols), rows)
     cols_s = _pad_rows(cols_cols, rows)
     v = _pad_rows(v.astype(jnp.float32), rows)
 

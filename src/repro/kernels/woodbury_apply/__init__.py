@@ -1,0 +1,4 @@
+"""Fused Nyström–Woodbury preconditioner apply (DESIGN.md §3.8)."""
+from .ops import woodbury_pallas, woodbury_xla  # noqa: F401
+from .ref import woodbury_apply_ref  # noqa: F401
+from .woodbury_apply import woodbury_apply  # noqa: F401

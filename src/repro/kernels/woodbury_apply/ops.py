@@ -1,0 +1,48 @@
+"""Backend entry points for the fused Woodbury preconditioner apply.
+
+``woodbury_xla`` is the pure-jnp path (autodiff for free).
+``woodbury_pallas`` wraps the Pallas kernel in ``jax.custom_vjp``.  The
+apply is linear in ``v`` with a matrix that is symmetric up to E⁻¹'s own
+symmetry, so the hot cotangent re-runs the *same* kernel with E⁻ᵀ:
+
+    d_v = (D⁻¹ − D⁻¹B E⁻ᵀ BᵀD⁻¹) g  =  woodbury_apply(b, dinv, einvᵀ, g).
+
+The preconditioner-payload cotangents (d_b, d_dinv, d_einv) are different
+contraction shapes from the forward — like gram_block's lookup cotangent
+they run on the jnp oracle; they only matter when someone differentiates
+*through* the preconditioner build, which no CG consumer does per-iteration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ref import woodbury_apply_ref
+from .woodbury_apply import woodbury_apply
+
+woodbury_xla = woodbury_apply_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _wood_p(b, dinv, einv, v, interpret):
+    return woodbury_apply(b, dinv, einv, v, interpret=interpret)
+
+
+def _wood_fwd(b, dinv, einv, v, interpret):
+    return _wood_p(b, dinv, einv, v, interpret), (b, dinv, einv, v)
+
+
+def _wood_bwd(interpret, res, g):
+    b, dinv, einv, v = res
+    _, oracle_vjp = jax.vjp(woodbury_apply_ref, b, dinv, einv, v)
+    d_b, d_dinv, d_einv, _ = oracle_vjp(g)
+    d_v = _wood_p(b, dinv, einv.T, g, interpret)
+    return d_b, d_dinv, d_einv, d_v
+
+
+_wood_p.defvjp(_wood_fwd, _wood_bwd)
+
+
+def woodbury_pallas(b, dinv, einv, v, *, interpret: bool = False):
+    return _wood_p(b, dinv, einv, v, interpret)

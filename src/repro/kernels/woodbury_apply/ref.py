@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused Nyström–Woodbury preconditioner apply.
+
+The Nyström preconditioner (solvers/nystrom.py) applies
+
+    M⁻¹ v = D⁻¹v − D⁻¹B E⁻¹ BᵀD⁻¹v,      E = I_r + BᵀD⁻¹B,
+
+once per CG iteration.  The pieces (B [T, r], D⁻¹ [T], E⁻¹ [r, r]) are all
+fixed across the whole solve — only ``v`` changes — so the apply is two
+GEMVs, a diagonal scale and a residual subtraction.  Passing E⁻¹ (formed
+once from the r×r Cholesky at preconditioner-build time) instead of
+re-running a triangular solve per iteration is what makes the whole apply a
+single fused dataflow: every op is a contraction against loop-invariant
+operands.
+
+These definitions are the semantics the Pallas kernel must reproduce
+(parity tests in tests/test_woodbury.py) and double as the ``"xla"``
+backend path in kernels/dispatch.py — fully differentiable in all four
+operands.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def woodbury_apply_ref(
+    b: jnp.ndarray,
+    dinv: jnp.ndarray,
+    einv: jnp.ndarray,
+    v: jnp.ndarray,
+) -> jnp.ndarray:
+    """M⁻¹v = D⁻¹v − D⁻¹B E⁻¹ BᵀD⁻¹v.
+
+    Args:
+      b: f32[T, r] Nyström factor (F of the partial pivoted Cholesky).
+      dinv: f32[T] inverse noise diagonal D⁻¹.
+      einv: f32[r, r] inverse capacitance E⁻¹ = (I_r + BᵀD⁻¹B)⁻¹.
+      v: f32[T] or f32[T, R] residual block.
+    Returns: same shape as ``v``.
+    """
+    dv = dinv[:, None] if v.ndim == 2 else dinv
+    w = dv * v
+    s = einv @ (b.T @ w)
+    return w - dv * (b @ s)

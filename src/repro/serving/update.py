@@ -327,6 +327,10 @@ def refit_alpha(
     (``alpha``-only reads) between scheduled refactorisations."""
     if strategy is None:
         strategy = solvers.SERVING_DEFAULT
+    if strategy.preconditioner == "auto":
+        # Dense m×m serving Gram: no trace rows to pivot, so auto's only
+        # candidate is the (prebuilt) Jacobi diagonal.
+        strategy = strategy.with_(preconditioner="jacobi")
     if strategy.preconditioner == "nystrom":
         # The serving system is a dense m×m Gram, not a trace-backed
         # ShiftedOperator — there are no pivot rows to build Nyström from.

@@ -15,7 +15,13 @@ from .cg import (  # noqa: F401
     make_preconditioner,
     solve,
 )
-from .nystrom import nystrom_precond, pivot_rows  # noqa: F401
+from .nystrom import (  # noqa: F401
+    nystrom_precond,
+    pivot_rows,
+    probe_spectrum,
+    resolve_strategy,
+    select_rank,
+)
 from .slq import (  # noqa: F401
     logdet_from_coeffs,
     rademacher,
@@ -23,7 +29,10 @@ from .slq import (  # noqa: F401
     tridiag_from_coeffs,
 )
 from .strategy import (  # noqa: F401
+    AUTO_RANKS,
+    DEFAULT_PRECOND_RANK,
     DRYRUN_DEFAULT,
+    MATVEC_DTYPES,
     MLL_DEFAULT,
     POSTERIOR_DEFAULT,
     PRECONDITIONERS,

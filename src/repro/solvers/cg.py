@@ -40,6 +40,11 @@ class CGResult(NamedTuple):
     #                       must surface it (bench_walks/bench_serving/
     #                       bench_solvers) so silent non-convergence can't
     #                       skew timings.
+    precond_rank: int = 0
+    #                       Nyström rank of the preconditioner the solve ran
+    #                       with (0 = none/jacobi) — the solve-diagnostics
+    #                       record of what the "auto" strategy chose.  Set by
+    #                       :func:`solve`; the raw loops leave the default.
 
 
 class LanczosCoeffs(NamedTuple):
@@ -218,7 +223,13 @@ def make_preconditioner(
     (plain callables fall back to identity — any SPD M is valid).
     ``"nystrom"`` requires a materialised-trace :class:`ShiftedOperator`
     (solvers/nystrom.py documents why the psum-sharded path is excluded).
+    ``"auto"`` resolves here (spectral probe → measured rank) when called
+    directly; :func:`solve` resolves it before reaching this point.
     """
+    if strategy.preconditioner == "auto":
+        from .nystrom import resolve_strategy
+
+        strategy = resolve_strategy(h, strategy)
     if strategy.preconditioner == "none":
         return None
     if strategy.preconditioner == "jacobi":
@@ -229,6 +240,20 @@ def make_preconditioner(
     return nystrom_precond(
         h, rank=strategy.precond_rank, jitter=strategy.precond_jitter
     )
+
+
+def _with_matvec_dtype(h, dtype: str):
+    """Apply the strategy's matvec precision to the operator.
+
+    Operators expose ``with_matvec_dtype`` (payload-only cast — see
+    core/linops.py); a bare callable gets its operand cast instead, with the
+    output restored to the recurrence dtype so the CG state stays f32."""
+    if dtype == "float32":
+        return h
+    if hasattr(h, "with_matvec_dtype"):
+        return h.with_matvec_dtype(dtype)
+    d = jnp.dtype(dtype)
+    return lambda v: h(v.astype(d)).astype(v.dtype)
 
 
 def solve(
@@ -249,17 +274,31 @@ def solve(
     MLL fit).  ``x0`` is honoured only when ``strategy.warm_start`` — the
     cold/warm decision lives in the strategy, not scattered at call sites.
     ``unroll`` only applies to the fixed loop (dry-run HLO costing).
+
+    ``preconditioner="auto"`` resolves here (eagerly — under jit tracing it
+    falls back to Jacobi; resolve before the jit boundary to get the
+    measured rank).  The preconditioner is always built from the *original*
+    f32 operator; ``strategy.matvec_dtype`` then wraps only the CG matvec,
+    and the rank actually used is reported as ``CGResult.precond_rank``.
     """
+    if strategy.preconditioner == "auto":
+        from .nystrom import resolve_strategy
+
+        strategy = resolve_strategy(h, strategy)
     if precond is None:
         precond = make_preconditioner(h, strategy)
+    rank = int(getattr(precond, "rank", 0))
+    matvec = _with_matvec_dtype(h, strategy.matvec_dtype)
     if not strategy.warm_start:
         x0 = None
     if strategy.adaptive:
-        return cg_solve(
-            h, b, tol=strategy.tol, max_iters=strategy.max_iters,
+        res = cg_solve(
+            matvec, b, tol=strategy.tol, max_iters=strategy.max_iters,
             dot=dot, precond=precond, x0=x0,
         )
-    return cg_solve_fixed(
-        h, b, iters=strategy.max_iters, dot=dot, precond=precond, x0=x0,
+        return res._replace(precond_rank=rank)
+    res = cg_solve_fixed(
+        matvec, b, iters=strategy.max_iters, dot=dot, precond=precond, x0=x0,
         unroll=unroll, tol=strategy.tol,
     )
+    return res._replace(precond_rank=rank)

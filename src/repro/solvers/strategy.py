@@ -20,7 +20,18 @@ from __future__ import annotations
 
 import dataclasses
 
-PRECONDITIONERS = ("none", "jacobi", "nystrom")
+PRECONDITIONERS = ("none", "jacobi", "nystrom", "auto")
+MATVEC_DTYPES = ("float32", "bfloat16")
+
+# The one Nyström pivot-budget default.  SolveStrategy.precond_rank and
+# nystrom_precond(rank=None) both resolve here — the bench, the
+# preconditioner builder and the strategy previously each carried their own
+# literal (64 / 64 / 256), which is how rank drift happens.
+DEFAULT_PRECOND_RANK = 64
+
+# Candidate ranks the "auto" preconditioner chooses between (0 = Jacobi).
+# See solvers/nystrom.py:select_rank for the measured decision rule.
+AUTO_RANKS = (0, 64, 128, 256)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +43,11 @@ class SolveStrategy:
       max_iters: iteration budget (exact trip count when ``adaptive=False``).
       preconditioner: ``"none"`` | ``"jacobi"`` (diag(H) approx) |
         ``"nystrom"`` (rank-r pivoted Nyström of K̂ via Woodbury — see
-        solvers/nystrom.py; requires a materialised-trace ShiftedOperator).
+        solvers/nystrom.py; requires a materialised-trace ShiftedOperator) |
+        ``"auto"`` (measure the spectrum with a short Lanczos probe and pick
+        rank ∈ AUTO_RANKS per operator — resolved eagerly by
+        :func:`repro.solvers.resolve_strategy`; under tracing it falls back
+        to ``"jacobi"``, so consumers resolve before entering jit).
       warm_start: consumers that hold a previous solution (Adam fit steps,
         BO/serving refits) pass it as ``x0``; strategies with
         ``warm_start=False`` make ``solve`` ignore any ``x0`` so cold/warm
@@ -42,6 +57,12 @@ class SolveStrategy:
       precond_rank: Nyström pivot count r (clamped to the system size).
       precond_jitter: SPD jitter added to the r×r pivot Gram before its
         Cholesky.
+      matvec_dtype: operand dtype for the H matvecs — ``"float32"`` or
+        ``"bfloat16"`` (ELL payload loads in bf16, accumulation and the
+        whole CG recurrence/residual arithmetic stay f32; the compact-trace
+        path in core/features.py established the bf16-loads/f32-math
+        contract).  Static, so like ``spmv_backend`` it rides the jit cache
+        key: flipping precision retraces instead of reusing a stale loop.
     """
 
     tol: float = 1e-5
@@ -49,14 +70,20 @@ class SolveStrategy:
     preconditioner: str = "jacobi"
     warm_start: bool = False
     adaptive: bool = True
-    precond_rank: int = 64
+    precond_rank: int = DEFAULT_PRECOND_RANK
     precond_jitter: float = 1e-6
+    matvec_dtype: str = "float32"
 
     def __post_init__(self):
         if self.preconditioner not in PRECONDITIONERS:
             raise ValueError(
                 f"unknown preconditioner {self.preconditioner!r}; "
                 f"valid: {PRECONDITIONERS}"
+            )
+        if self.matvec_dtype not in MATVEC_DTYPES:
+            raise ValueError(
+                f"unknown matvec_dtype {self.matvec_dtype!r}; "
+                f"valid: {MATVEC_DTYPES}"
             )
         if self.max_iters < 1:
             raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")

@@ -266,8 +266,10 @@ def test_warm_started_fit_uses_fewer_total_cg_iters(system):
 def test_gp_cg_shim_warns_and_matches():
     a = np.diag(np.linspace(1.0, 5.0, 16)).astype(np.float32)
     b = np.ones(16, np.float32)
+    import repro.gp.cg as shim
     from repro.gp.cg import cg_solve as shim_solve
 
+    shim._WARNED = False                  # the shim warns once per process
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
         res = shim_solve(lambda v: jnp.asarray(a) @ v, jnp.asarray(b),
@@ -275,6 +277,30 @@ def test_gp_cg_shim_warns_and_matches():
     assert any(issubclass(w.category, DeprecationWarning) for w in caught)
     np.testing.assert_allclose(np.array(res.x), np.linalg.solve(a, b),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_gp_cg_shim_warns_exactly_once_and_reexports():
+    """The warn-once rule (hot loops through the shim must not drown real
+    warnings) and the re-exported strategy surface (ISSUE 6 additions)."""
+    a = np.diag(np.linspace(1.0, 5.0, 16)).astype(np.float32)
+    b = jnp.ones(16)
+    import repro.gp.cg as shim
+
+    shim._WARNED = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            shim.cg_solve(lambda v: jnp.asarray(a) @ v, b,
+                          tol=1e-7, max_iters=100)
+        shim.cg_solve_fixed(lambda v: jnp.asarray(a) @ v, b, iters=4)
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+    for name in ("SolveStrategy", "CGResult", "resolve_strategy",
+                 "select_rank", "PRECONDITIONERS", "MATVEC_DTYPES",
+                 "AUTO_RANKS", "DEFAULT_PRECOND_RANK"):
+        assert hasattr(shim, name), name
+    # The re-exported classes ARE the solvers ones (no parallel types).
+    assert shim.SolveStrategy is solvers.SolveStrategy
 
 
 def test_public_exports():
@@ -286,7 +312,9 @@ def test_public_exports():
         assert hasattr(gp, name), name
     for name in ("SolveStrategy", "CGResult", "cg_solve", "cg_solve_fixed",
                  "slq_logdet", "solve", "nystrom_precond", "pivot_rows",
-                 "make_preconditioner", "jacobi_precond"):
+                 "make_preconditioner", "jacobi_precond", "resolve_strategy",
+                 "select_rank", "probe_spectrum", "AUTO_RANKS",
+                 "DEFAULT_PRECOND_RANK", "MATVEC_DTYPES"):
         assert hasattr(solvers, name), name
 
 
@@ -348,6 +376,79 @@ def test_pivoted_inducing_selection_spreads_over_clusters(system):
     # should rarely be adjacent rows.
     adjacent = np.sum(np.abs(np.diff(np.sort(ind))) == 1)
     assert adjacent < 8, ind
+
+
+def test_bf16_matvecs_reach_f32_fixed_point(system):
+    """ISSUE 6 satellite: matvec_dtype="bfloat16" converges to the same
+    fixed point as f32 up to the operator-perturbation scale (the bf16
+    payload perturbs H itself by O(2⁻⁸), so the tolerance is relative and
+    loose — the claim is "same solve", not bitwise equality)."""
+    h, b, *_ = system
+    st = solvers.SolveStrategy(tol=1e-6, max_iters=2000)
+    f32 = solvers.solve(h, b, st)
+    bf16 = solvers.solve(h, b, st.with_(matvec_dtype="bfloat16"))
+    assert bool(jnp.all(bf16.converged))
+    rel = np.linalg.norm(np.array(bf16.x) - np.array(f32.x)) / max(
+        np.linalg.norm(np.array(f32.x)), 1e-12
+    )
+    assert rel < 5e-2, rel
+    # And the nystrom-preconditioned bf16 solve lands on the same point.
+    nys16 = solvers.solve(h, b, st.with_(preconditioner="nystrom",
+                                         precond_rank=32,
+                                         matvec_dtype="bfloat16"))
+    assert bool(jnp.all(nys16.converged))
+    rel = np.linalg.norm(np.array(nys16.x) - np.array(f32.x)) / max(
+        np.linalg.norm(np.array(f32.x)), 1e-12
+    )
+    assert rel < 5e-2, rel
+
+
+def test_auto_strategy_resolves_and_reports_rank(system):
+    """"auto" resolves eagerly into jacobi or nystrom-with-measured-rank,
+    the solve matches the dense fixed point, and CGResult.precond_rank
+    reports the rank the solve actually ran with."""
+    h, b, *_ = system
+    st = solvers.SolveStrategy(tol=1e-6, max_iters=2000,
+                               preconditioner="auto")
+    resolved = solvers.resolve_strategy(h, st)
+    assert resolved.preconditioner in ("jacobi", "nystrom")
+    if resolved.preconditioner == "nystrom":
+        assert resolved.precond_rank in solvers.AUTO_RANKS
+
+    res = solvers.solve(h, b, st)
+    assert bool(jnp.all(res.converged))
+    want = np.linalg.solve(np.array(h.dense()), np.array(b))
+    np.testing.assert_allclose(np.array(res.x), want, rtol=2e-3, atol=2e-3)
+    if resolved.preconditioner == "nystrom":
+        assert int(res.precond_rank) == resolved.precond_rank
+    else:
+        assert int(res.precond_rank) == 0
+    # An explicit nystrom solve reports its static rank too.
+    nys = solvers.solve(h, b, st.with_(preconditioner="nystrom",
+                                       precond_rank=32))
+    assert int(nys.precond_rank) == 32
+
+
+def test_auto_strategy_falls_back_to_jacobi_under_jit(system):
+    """Rank is a static loop-shape decision: under tracing the auto path
+    must silently degrade to jacobi instead of leaking a tracer into the
+    spectral probe — the jitted solve still converges and matches."""
+    h, b, *_ = system
+    st = solvers.SolveStrategy(tol=1e-6, max_iters=2000,
+                               preconditioner="auto")
+
+    @jax.jit
+    def run(b):
+        res = solvers.solve(h, b, st)
+        return res.x, res.converged
+
+    x, converged = run(b)
+    assert bool(jnp.all(converged))
+    want = np.linalg.solve(np.array(h.dense()), np.array(b))
+    np.testing.assert_allclose(np.array(x), want, rtol=2e-3, atol=2e-3)
+    # Operators auto can't serve (bare callables) resolve to jacobi too.
+    bare = solvers.resolve_strategy(lambda v: v, st)
+    assert bare.preconditioner == "jacobi"
 
 
 # --- hypothesis property: preconditioning never changes the fixed point ---
