@@ -1,0 +1,230 @@
+"""Estimator-quality benchmark: kernel MSE × walk scheme × n_walkers.
+
+The walk sampler's variance-reduction schemes ("iid" | "antithetic" | "qmc"
+| "grfspp", DESIGN.md §3.9) only matter if they buy *measured* estimator
+quality per walker — every downstream cost (sampling, K̂ matvecs, CG
+iterations, serving row appends) is linear in n_walkers, so "equal MSE at
+fewer walkers" is a raw-speed win everywhere.  This bench measures that
+tradeoff and writes ``BENCH_estimator.json``, the artifact the CI
+estimator-quality gate (benchmarks/check_regression.py) blocks on:
+
+  * ``kernel_mse``  — mean squared error of K̂ = ΦΦᵀ against the *exact*
+    truncation target K = Ψᵀ_trunc Ψ_trunc on a probe-node submatrix
+    (off-diagonal entries; the same-ensemble diagonal is biased for every
+    scheme alike), seed-averaged.  The exact probe block is computed
+    sparsely — Ψ E_S via l_max adjacency matvecs — so N = 10⁴ never
+    materialises an N×N matrix.
+  * ``lml_err``     — downstream log-marginal-likelihood error: |LML(K̂) −
+    LML(K_exact)| on a training block, per scheme.
+  * ``bo_regret``   — end-to-end simple regret of GRF Thompson sampling on
+    a ring graph per scheme (informational; small-budget regret is noisy).
+  * ``headline`` / ``walker_efficiency`` — the within-run claims the CI
+    gate checks: at the headline grid point a variance-reduced scheme must
+    beat iid MSE at equal walkers, and some scheme at half the walkers
+    must match or beat full-walker iid MSE.
+
+Timing rows (``results``) record a full sampling pass per scheme so the
+"variance reduction is ~free per walker" claim is auditable.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import bench_main, timeit
+from repro.core import features, modulation, walks
+from repro.graphs import generators, signals
+from repro.kernels import dispatch
+from repro.kernels.walk_sampler.rng import SCHEMES
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_estimator.json")
+
+N_PROBES = 256               # probe-node submatrix for the MSE measurement
+# The classic GRF halt probability: at p_halt = 0.5 the (1−p)^{−l} importance
+# correction makes termination the dominant variance source, which is the
+# regime the variance-reduced schemes target (at p_halt ≤ 0.25 direction
+# choice dominates and the measured gains shrink to ~20%).
+P_HALT = 0.5
+L_MAX = 4
+HEADLINE_N = 10_000          # the gated equal-walker grid point ...
+HEADLINE_W = 16              # ... at this walker count
+EFFICIENCY_N = 1_000         # the gated half-the-walkers grid point
+REDUCED_W = 8
+VR_SCHEMES = tuple(s for s in SCHEMES if s != "iid")
+
+
+def _adj_matvec(graph, v):
+    """Ã v for [N, S] v via the padded ELL adjacency (padding weights are
+    zero, the same invariant to_dense relies on)."""
+    return jnp.einsum("nd,nds->ns", graph.weights, v[graph.neighbors])
+
+
+def _target_gram(graph, f, probes):
+    """Exact K[probes, probes] of the truncation target K = Ψᵀ Ψ,
+    Ψ = Σ_l f_l Ã^l — computed as CᵀC with C = Ψ E_S (sparse, O(l_max·E·S))."""
+    n, s = graph.n_nodes, probes.shape[0]
+    v = jnp.zeros((n, s), jnp.float32).at[probes, jnp.arange(s)].set(1.0)
+    c = f[0] * v
+    for l in range(1, f.shape[0]):
+        v = _adj_matvec(graph, v)
+        c = c + f[l] * v
+    return c.T @ c
+
+
+def _grf_gram(graph, probes, key, n_walkers, scheme, f):
+    """K̂[probes, probes] from one walk ensemble (exact duplicate-column
+    handling via the gram_block kernel — no N-space anything)."""
+    tr = walks.sample_walks_for_nodes(
+        graph, probes, key, n_walkers, P_HALT, L_MAX, scheme=scheme)
+    vals = features.feature_values(tr, f)
+    return dispatch.gram_block(vals, tr.cols, vals, tr.cols)
+
+
+def _dense_lml(k, y, sigma_n2):
+    t = y.shape[0]
+    h = k + sigma_n2 * jnp.eye(t, dtype=k.dtype)
+    sign, logdet = jnp.linalg.slogdet(h)
+    quad = y @ jnp.linalg.solve(h, y)
+    return -0.5 * quad - 0.5 * logdet - 0.5 * t * jnp.log(2 * jnp.pi)
+
+
+def _bo_regret(scheme, seeds, n_init, n_steps):
+    from repro.bo import thompson
+
+    g = generators.ring(600, k=3)
+    ytrue = np.asarray(signals.sinusoid_ring(600))
+    fmax = float(ytrue.max())
+    mod = modulation.diffusion(l_max=5)
+    tr = walks.sample_walks(g, jax.random.PRNGKey(0), n_walkers=16,
+                            p_halt=0.15, l_max=5, scheme=scheme)
+    out = []
+    for s in seeds:
+        rng = np.random.default_rng(s)
+        obj = lambda idx: ytrue[idx] + 0.05 * rng.standard_normal(len(idx))
+        res = thompson.thompson_sampling(
+            tr, mod, obj, jax.random.PRNGKey(s), n_init=n_init,
+            n_steps=n_steps, refit_every=10, refit_steps=6, f_max=fmax)
+        out.append(float(res.regret[-1]))
+    return float(np.mean(out))
+
+
+def run(fast: bool = True):
+    sizes = [1_000, 10_000]
+    walkers = [4, 8, 16]
+    seeds = range(3) if fast else range(5)
+    bo_seeds = (1, 2) if fast else (1, 2, 3)
+    bo_init, bo_steps = (20, 25) if fast else (50, 100)
+
+    mod = modulation.diffusion(l_max=L_MAX)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+
+    rows, results, kernel_mse, lml_err = [], {}, {}, {}
+    for n in sizes:
+        graph = generators.ring(n, k=3)
+        rng = np.random.default_rng(n)
+        probes = jnp.asarray(
+            np.sort(rng.choice(n, N_PROBES, replace=False)).astype(np.int32))
+        k_target = _target_gram(graph, f, probes)
+        off = ~np.eye(N_PROBES, dtype=bool)
+        k_target_np = np.array(k_target)
+
+        # Downstream LML: the first 192 probes act as the training block.
+        t_lml = 192
+        y = np.asarray(signals.gp_sample_from_dense_kernel(
+            k_target_np[:t_lml, :t_lml], seed=n)).astype(np.float32)
+        sigma_n2 = 0.05
+        lml_exact = float(_dense_lml(
+            k_target[:t_lml, :t_lml], jnp.asarray(y), sigma_n2))
+
+        for scheme in SCHEMES:
+            ms = timeit(
+                lambda scheme=scheme: walks.sample_walks(
+                    graph, jax.random.PRNGKey(0), HEADLINE_W, P_HALT, L_MAX,
+                    scheme=scheme).loads
+            ) * 1e3
+            results[f"sample/N{n}/{scheme}"] = ms
+            rows.append(dict(
+                name=f"estimator_sample_N{n}_{scheme}",
+                us_per_call=f"{ms * 1e3:.0f}", N=n, scheme=scheme,
+                n_walkers=HEADLINE_W,
+            ))
+
+            for w in walkers:
+                errs, lml_abs = [], []
+                for s in seeds:
+                    k_hat = np.array(_grf_gram(
+                        graph, probes, jax.random.PRNGKey(100 + s), w,
+                        scheme, f))
+                    errs.append(float(((k_hat - k_target_np)[off] ** 2).mean()))
+                    if w == HEADLINE_W:
+                        lml_hat = float(_dense_lml(
+                            jnp.asarray(k_hat[:t_lml, :t_lml]),
+                            jnp.asarray(y), sigma_n2))
+                        lml_abs.append(abs(lml_hat - lml_exact))
+                mse = float(np.mean(errs))
+                kernel_mse[f"N{n}/{scheme}/w{w}"] = mse
+                if lml_abs:
+                    lml_err[f"N{n}/{scheme}/w{HEADLINE_W}"] = float(
+                        np.mean(lml_abs))
+        rows.append(dict(
+            name=f"estimator_mse_N{n}",
+            **{f"{s}_w{w}": kernel_mse[f"N{n}/{s}/w{w}"]
+               for s in SCHEMES for w in walkers},
+        ))
+
+    bo_regret = {}
+    for scheme in SCHEMES:
+        bo_regret[f"ring600/{scheme}"] = _bo_regret(
+            scheme, bo_seeds, bo_init, bo_steps)
+    rows.append(dict(name="estimator_bo_regret", **bo_regret))
+
+    # Within-run claims the CI estimator-quality gate blocks on.
+    grid = f"N{HEADLINE_N}/w{HEADLINE_W}"
+    iid_mse = kernel_mse[f"N{HEADLINE_N}/iid/w{HEADLINE_W}"]
+    vr = {s: kernel_mse[f"N{HEADLINE_N}/{s}/w{HEADLINE_W}"]
+          for s in VR_SCHEMES}
+    best_scheme = min(vr, key=vr.get)
+    headline = dict(
+        grid_point=grid, iid_mse=iid_mse, best_scheme=best_scheme,
+        best_mse=vr[best_scheme], ratio=vr[best_scheme] / iid_mse,
+    )
+    eff_iid = kernel_mse[f"N{EFFICIENCY_N}/iid/w{HEADLINE_W}"]
+    eff = {s: kernel_mse[f"N{EFFICIENCY_N}/{s}/w{REDUCED_W}"] / eff_iid
+           for s in VR_SCHEMES}
+    eff_scheme = min(eff, key=eff.get)
+    walker_efficiency = dict(
+        grid_point=f"N{EFFICIENCY_N}", iid_walkers=HEADLINE_W,
+        reduced_walkers=REDUCED_W, best_scheme=eff_scheme,
+        mse_ratio=eff[eff_scheme],
+    )
+    rows.append(dict(name="estimator_headline", **headline))
+    rows.append(dict(name="estimator_walker_efficiency", **walker_efficiency))
+
+    artifact = {
+        "bench": "estimator",
+        "host_backend": jax.default_backend(),
+        "unit": "ms_per_call",
+        "walk_config": dict(p_halt=P_HALT, l_max=L_MAX, walkers=walkers),
+        "schemes": list(SCHEMES),
+        "n_probes": N_PROBES,
+        "seeds": len(list(seeds)),
+        "results": results,
+        "kernel_mse": kernel_mse,
+        "lml_err": lml_err,
+        "bo_regret": bo_regret,
+        "headline": headline,
+        "walker_efficiency": walker_efficiency,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    rows.append(dict(name="estimator_artifact", path=os.path.abspath(OUT_PATH)))
+    return rows
+
+
+if __name__ == "__main__":
+    bench_main(run)

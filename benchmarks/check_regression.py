@@ -19,7 +19,18 @@ Two modes, matching the two CI steps (DESIGN.md §3.6):
     replace the old cross-artifact iteration-ratio rule for such artifacts;
     legacy artifacts without ``time_ratios`` keep failing on any iteration
     count regressing more than --iters-threshold (default 1.5×) vs the
-    baseline.  Exit 1 on any violation.
+    baseline.  Artifacts carrying a ``kernel_mse`` table
+    (BENCH_estimator.json, ISSUE 7) get the estimator-quality gate: every
+    per-scheme kernel-MSE key shared with the baseline may not regress by
+    more than --mse-threshold (default 1.25× — the walker RNG is
+    counter-based, so MSE at fixed seeds is deterministic up to float
+    association; a >1.25× shift is an estimator change, not jitter), the
+    within-run ``headline`` ratio must stay below 1.0 (some
+    variance-reduced scheme beats iid MSE at equal walkers at the headline
+    grid point), and the ``walker_efficiency`` ratio must stay at or below
+    1.0 (some scheme at half the walkers matches full-walker iid).  Exit 1
+    on any violation; missing expected keys are reported by name, never as
+    a traceback.
   * ``--mode timing`` (informational, the CI step wraps it in
     continue-on-error): per shared key print the fresh/baseline ratio and
     exit 1 if the *median* ratio exceeds --threshold (default 2×).  The
@@ -45,12 +56,68 @@ def _load(path: str) -> dict:
         return json.load(fh)
 
 
+def _expect(table, key: str, label: str, where: str, errors: list[str]):
+    """Fetch ``table[key]`` or record a *named* error (never a KeyError —
+    a gate that dies with a traceback reads as CI flake, not as the
+    schema violation it is)."""
+    if not isinstance(table, dict) or key not in table:
+        errors.append(
+            f"{label}: expected artifact key {where}[{key!r}] is missing"
+        )
+        return None
+    return table[key]
+
+
+def check_estimator_quality(
+    baseline: dict, fresh: dict, label: str, mse_threshold: float,
+) -> list[str]:
+    """Blocking gate for artifacts with a ``kernel_mse`` table (ISSUE 7)."""
+    errors: list[str] = []
+    kernel_mse = fresh["kernel_mse"]
+    base_mse = baseline.get("kernel_mse", {})
+    dropped = set(base_mse) - set(kernel_mse)
+    if dropped:
+        errors.append(
+            f"{label}: kernel-MSE rows dropped vs baseline: {sorted(dropped)}"
+        )
+    for key in sorted(set(base_mse) & set(kernel_mse)):
+        b, f = base_mse[key], kernel_mse[key]
+        if isinstance(b, (int, float)) and b > 0 and f > b * mse_threshold:
+            errors.append(
+                f"{label}: kernel-MSE regression {key}: {b:.3e} -> {f:.3e} "
+                f"(> {mse_threshold}x)"
+            )
+    headline = fresh.get("headline")
+    ratio = _expect(headline, "ratio", label, "headline", errors)
+    if ratio is not None and not (
+        isinstance(ratio, (int, float)) and ratio < 1.0
+    ):
+        grid = headline.get("grid_point", "?")
+        errors.append(
+            f"{label}: no variance-reduced scheme beats iid kernel-MSE at "
+            f"equal walkers at the headline grid point {grid} "
+            f"(best ratio {ratio!r}, need < 1.0)"
+        )
+    eff = fresh.get("walker_efficiency")
+    eff_ratio = _expect(eff, "mse_ratio", label, "walker_efficiency", errors)
+    if eff_ratio is not None and not (
+        isinstance(eff_ratio, (int, float)) and eff_ratio <= 1.0
+    ):
+        errors.append(
+            f"{label}: no scheme at {eff.get('reduced_walkers', '?')} walkers "
+            f"matches iid at {eff.get('iid_walkers', '?')} walkers "
+            f"(best MSE ratio {eff_ratio!r}, need <= 1.0)"
+        )
+    return errors
+
+
 def check_correctness(
     baseline: dict,
     fresh: dict,
     label: str,
     iters_threshold: float = 1.5,
     bf16_threshold: float = 1.25,
+    mse_threshold: float = 1.25,
 ) -> list[str]:
     errors = []
     results = fresh.get("results")
@@ -88,6 +155,11 @@ def check_correctness(
                 f"{label}: convergence rows dropped vs baseline: "
                 f"{sorted(dropped_conv)}"
             )
+
+    if fresh.get("kernel_mse") is not None:
+        errors.extend(
+            check_estimator_quality(baseline, fresh, label, mse_threshold)
+        )
 
     time_ratios = fresh.get("time_ratios")
     if time_ratios is not None:
@@ -148,6 +220,7 @@ def main() -> int:
     parser.add_argument("--threshold", type=float, default=2.0)
     parser.add_argument("--iters-threshold", type=float, default=1.5)
     parser.add_argument("--bf16-threshold", type=float, default=1.25)
+    parser.add_argument("--mse-threshold", type=float, default=1.25)
     args = parser.parse_args()
 
     failed = False
@@ -163,7 +236,8 @@ def main() -> int:
         if args.mode == "correctness":
             errors = check_correctness(baseline, fresh, label,
                                        args.iters_threshold,
-                                       args.bf16_threshold)
+                                       args.bf16_threshold,
+                                       args.mse_threshold)
             for err in errors:
                 print(err)
             failed = failed or bool(errors)

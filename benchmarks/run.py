@@ -54,6 +54,7 @@ def main() -> None:
         bench_ablation,
         bench_bo,
         bench_classification,
+        bench_estimator,
         bench_regression,
         bench_scaling,
         bench_serving,
@@ -66,6 +67,7 @@ def main() -> None:
     suites = [
         ("spmv (backend registry / BENCH_spmv.json)", bench_spmv),
         ("walks (walk sampler / BENCH_walks.json)", bench_walks),
+        ("estimator (walk schemes / BENCH_estimator.json)", bench_estimator),
         ("serving (online engine / BENCH_serving.json)", bench_serving),
         ("solvers (Krylov strategy layer / BENCH_solvers.json)", bench_solvers),
         ("scaling (Table 1 / Fig 2)", bench_scaling),

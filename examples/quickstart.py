@@ -9,17 +9,30 @@ and compares against the O(N³) exact GP.
 
 This materialises the full [N, K] walk trace — fine up to ~10⁵ nodes.  For
 the chunked 10⁶-node path (lazy Φ, O(chunk·K) peak memory) see README.md
-"The 10⁶-node path" and `posterior.pathwise_samples_chunked`."""
+"The 10⁶-node path" and `posterior.pathwise_samples_chunked`.
+
+``--scheme`` picks the walker variance-reduction scheme (DESIGN.md §3.9);
+``--skip-exact`` drops the O(N³) dense baseline — the shape the CI
+walk-scheme smoke step runs."""
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import features, kernels_exact, modulation, walks
-from repro.gp import exact, mll, posterior
 from repro.graphs import generators, signals
+from repro.gp import exact, mll, posterior
+from repro.kernels.walk_sampler.rng import SCHEMES
 
 
 def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--scheme", choices=SCHEMES, default="iid",
+                        help="walker variance-reduction scheme")
+    parser.add_argument("--skip-exact", action="store_true",
+                        help="skip the O(N^3) exact-GP baseline")
+    args = parser.parse_args()
     # --- problem: noisy observations of a smooth signal on a 20×20 grid ----
     g = generators.grid2d(20, 20)
     n = g.n_nodes
@@ -33,8 +46,8 @@ def main():
 
     # --- 1) kernel initialisation: GRF random walks (Alg. 1) ---------------
     tr = walks.sample_walks(g, jax.random.PRNGKey(0), n_walkers=100,
-                            p_halt=0.1, l_max=10)
-    print(f"GRF trace: {tr.slots} deposit slots/node "
+                            p_halt=0.1, l_max=10, scheme=args.scheme)
+    print(f"GRF trace [{args.scheme}]: {tr.slots} deposit slots/node "
           f"({tr.loads.size * 12 / 1e6:.1f} MB total, vs "
           f"{n * n * 4 / 1e6:.1f} MB dense)")
 
@@ -59,6 +72,8 @@ def main():
     print(f"GRF-GP  : test RMSE {rmse:.4f}  NLPD {nlpd:.4f}")
 
     # --- exact O(N³) baseline ----------------------------------------------
+    if args.skip_exact:
+        return
     p_ex, k_full = exact.fit_exact_diffusion(g, jnp.asarray(train), y, steps=150)
     m_ex, v_ex = exact.cholesky_posterior(
         k_full, jnp.asarray(train), y, jnp.exp(2 * p_ex["log_sigma_n"]))

@@ -210,6 +210,7 @@ def thompson_sampling(
                 trace_x = walks.sample_walks_for_nodes(
                     graph, x_all, walk_key,
                     walk.n_walkers, walk.p_halt, walk.l_max, walk.reweight,
+                    walk.scheme,
                 )
             else:
                 trace_x = features.take_rows(trace, x_all)
@@ -346,6 +347,7 @@ def thompson_sampling_incremental(
                 trace_x = walks.sample_walks_for_nodes(
                     graph, jnp.asarray(state.x_buf), walk_key,
                     walk.n_walkers, walk.p_halt, walk.l_max, walk.reweight,
+                    walk.scheme,
                 )
                 if fit_strategy.preconditioner == "auto":
                     # Same once-per-run resolution as thompson_sampling.

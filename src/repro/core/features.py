@@ -123,7 +123,7 @@ def _sample_chunk_vals(graph, f, seed, start, chunk, n_rows, cfg):
     cols, loads, lens = dispatch.walk_sample(
         graph.neighbors, graph.weights, graph.deg, nodes, seed,
         n_walkers=cfg.n_walkers, p_halt=cfg.p_halt, l_max=cfg.l_max,
-        reweight=cfg.reweight,
+        reweight=cfg.reweight, scheme=cfg.scheme,
     )
     vals = (loads * valid[:, None]).astype(f.dtype) * f[lens]
     return cols, vals

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from ..graphs.formats import Graph
 from ..kernels import dispatch
+from ..kernels.walk_sampler.rng import SCHEMES
 
 DEFAULT_CHUNK = 65536
 
@@ -74,12 +75,25 @@ class WalkConfig:
     """Hashable walk-sampling hyperparameters (static under jit).
 
     Bundles what every sampling call needs so the chunked operators and the
-    distributed shard path can carry one value instead of four."""
+    distributed shard path can carry one value instead of four.
+
+    ``scheme`` picks the walker variance-reduction strategy ("iid" |
+    "antithetic" | "qmc" | "grfspp" — DESIGN.md §3.9).  It is part of this
+    frozen config, so like the spmv backend it rides every jit cache key as
+    a static and flows unchanged through the chunked / sharded / serving
+    paths."""
 
     n_walkers: int
     p_halt: float = 0.1
     l_max: int = 10
     reweight: bool = True
+    scheme: str = "iid"
+
+    def __post_init__(self):
+        if self.scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown walk scheme {self.scheme!r}; valid: {SCHEMES}"
+            )
 
     @property
     def slots(self) -> int:
@@ -102,7 +116,7 @@ def _sample(graph: Graph, nodes: jax.Array, seed: jax.Array,
         cols, loads, lens = dispatch.walk_sample(
             graph.neighbors, graph.weights, graph.deg, nodes, seed,
             n_walkers=cfg.n_walkers, p_halt=cfg.p_halt, l_max=cfg.l_max,
-            reweight=cfg.reweight,
+            reweight=cfg.reweight, scheme=cfg.scheme,
         )
     return WalkTrace(cols=cols, loads=loads, lens=lens)
 
@@ -114,12 +128,13 @@ def sample_walks(
     p_halt: float = 0.1,
     l_max: int = 10,
     reweight: bool = True,
+    scheme: str = "iid",
 ) -> WalkTrace:
     """Sample ``n_walkers`` truncated walks from every node (Alg. 2).
 
     Returns a :class:`WalkTrace` with K = n_walkers*(l_max+1) slots per node.
     """
-    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight)
+    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight, scheme)
     nodes = jnp.arange(graph.n_nodes, dtype=jnp.int32)
     return _sample(graph, nodes, walk_seed(key), cfg=cfg,
                    spmv_backend=dispatch.get_backend())
@@ -133,13 +148,15 @@ def sample_walks_for_nodes(
     p_halt: float = 0.1,
     l_max: int = 10,
     reweight: bool = True,
+    scheme: str = "iid",
 ) -> WalkTrace:
     """Sample walks only from ``nodes`` (subset features, §3.1 remark).
 
     With the counter RNG the returned rows equal the corresponding rows of
     ``sample_walks(graph, key, ...)`` exactly — subset traces are consistent
-    with the full Φ without materialising it."""
-    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight)
+    with the full Φ without materialising it (every scheme keeps this: the
+    driving streams are keyed on absolute node id)."""
+    cfg = WalkConfig(n_walkers, p_halt, l_max, reweight, scheme)
     return _sample(graph, nodes.astype(jnp.int32), walk_seed(key), cfg=cfg,
                    spmv_backend=dispatch.get_backend())
 

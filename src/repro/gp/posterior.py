@@ -208,7 +208,7 @@ def pathwise_samples_chunked(
         # to the one the jitted impl samples.
         trace_x = walks.sample_walks_for_nodes(
             graph, train_nodes, walk_key,
-            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
+            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight, cfg.scheme,
         )
         strategy = _resolve_auto(
             strategy, trace_x, f, sigma_n2, obs_mask, graph.n_nodes
@@ -252,7 +252,7 @@ def _pathwise_samples_chunked(
 
         trace_x = walks.sample_walks_for_nodes(
             graph, train_nodes, walk_key,
-            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight,
+            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight, cfg.scheme,
         )
         h = make_h_operator(trace_x, f, noise, n)
         sol = solvers.solve(h, resid, strategy)

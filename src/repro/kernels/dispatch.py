@@ -168,14 +168,17 @@ def woodbury_apply(b, dinv, einv, v, *, backend: str | None = None):
 def walk_sample(
     neighbors, weights, deg, nodes, seed,
     *, n_walkers: int, p_halt: float, l_max: int, reweight: bool = True,
-    backend: str | None = None,
+    scheme: str = "iid", backend: str | None = None,
 ):
     """(cols, loads, lens) = GRF walk deposits for ``nodes`` in ELL layout.
 
     The counter-based RNG (kernels/walk_sampler/rng.py) is keyed on the
     absolute start-node id, so the result is independent of how ``nodes``
     is chunked across calls — the contract the chunked drivers in
-    core/walks.py and core/features.py rely on."""
+    core/walks.py and core/features.py rely on.  ``scheme`` selects the
+    variance-reduction strategy ("iid" | "antithetic" | "qmc" | "grfspp",
+    DESIGN.md §3.9); like the backend it is resolved at trace time and
+    rides the jit cache key as a static."""
     backend = _check(backend) if backend is not None else get_backend()
     from .walk_sampler import ops
 
@@ -183,11 +186,12 @@ def walk_sample(
         return ops.walk_sample_xla(
             neighbors, weights, deg, nodes, seed,
             n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
+            scheme=scheme,
         )
     return ops.walk_sample_pallas(
         neighbors, weights, deg, nodes, seed,
         n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
-        interpret=_interpret(backend),
+        scheme=scheme, interpret=_interpret(backend),
     )
 
 

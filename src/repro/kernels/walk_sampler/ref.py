@@ -13,6 +13,16 @@ deposits (current node, load·alive, l) into ELL slot w·(l_max+1)+l; halting
 is geometric with probability ``p_halt`` per step, and a halted walker keeps
 moving with its deposits masked to zero (masking == rejection at the deposit
 stage).  ``reweight`` applies the importance weight d/(1−p_halt) per move.
+
+``scheme`` selects the variance-reduction strategy (DESIGN.md §3.9): the
+halt uniforms come from :func:`rng.halt_uniform` (``iid`` / ``antithetic`` /
+``qmc``), except ``grfspp``, which never draws them — the Bernoulli survival
+indicator Π 1{u_j ≥ p_halt} is replaced by its expectation (1−p_halt)^l at
+the deposit stage (a Rao-Blackwellised, GRFs++-style weighted deposit: same
+mean by E[1{alive at l}] = (1−p_halt)^l, strictly lower variance).  Only
+termination is scheme-dependent; directional choices stay iid, so the walk
+*structure* law is shared and ``grfspp`` cols/lens are bit-identical to
+``iid``.
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ def walk_block(
     p_halt: float,
     l_max: int,
     reweight: bool = True,
+    scheme: str = "iid",
 ):
     """Sample walks for a block of start nodes; returns (cols, loads, lens).
 
@@ -39,6 +50,8 @@ def walk_block(
     divided by n_walkers (the estimator's 1/n).  Pure jnp — the Pallas
     kernel runs this exact function per VMEM block.
     """
+    if scheme not in rng.SCHEMES:
+        raise ValueError(f"unknown walk scheme {scheme!r}; valid: {rng.SCHEMES}")
     m = nodes.shape[0]
     max_deg = neighbors.shape[1]
     nbr_flat = neighbors.reshape(-1)
@@ -54,9 +67,16 @@ def walk_block(
     cols_steps, loads_steps = [], []
     for step in range(l_max + 1):
         cols_steps.append(cur)
-        loads_steps.append(load * alive)
+        if scheme == "grfspp":
+            # Analytic termination: `alive` carries only the structural
+            # (degree-0) mask; the survival probability enters as an exact
+            # per-step weight instead of a sampled indicator.
+            loads_steps.append(
+                load * alive * jnp.float32((1.0 - p_halt) ** step)
+            )
+        else:
+            loads_steps.append(load * alive)
         u_choice = rng.counter_uniform(seed, node_u, walker_u, 2 * step)
-        u_halt = rng.counter_uniform(seed, node_u, walker_u, 2 * step + 1)
         d = jnp.take(deg, cur)                              # [M, W]
         # Guard isolated nodes: degree 0 ⇒ stay on padding with zero load.
         choice = jnp.minimum(
@@ -70,7 +90,11 @@ def walk_block(
             load = load * d.astype(jnp.float32) / (1.0 - p_halt) * w
         else:
             load = load * w
-        alive = alive * (u_halt >= p_halt).astype(jnp.float32)
+        if scheme != "grfspp":
+            u_halt = rng.halt_uniform(
+                seed, node_u, walker_u, 2 * step + 1, scheme=scheme
+            )
+            alive = alive * (u_halt >= p_halt).astype(jnp.float32)
         alive = alive * (d > 0).astype(jnp.float32)
         cur = nxt
 

@@ -39,11 +39,12 @@ DEFAULT_BM = 256
 def _walk_kernel(
     nodes_ref, seed_ref, nbr_ref, wgt_ref, deg_ref,
     cols_ref, loads_ref, lens_ref,
-    *, n_walkers, p_halt, l_max, reweight,
+    *, n_walkers, p_halt, l_max, reweight, scheme,
 ):
     cols, loads, lens = walk_block(
         nbr_ref[:], wgt_ref[:], deg_ref[:], nodes_ref[:], seed_ref[0],
         n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
+        scheme=scheme,
     )
     cols_ref[:] = cols
     loads_ref[:] = loads
@@ -52,8 +53,8 @@ def _walk_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_walkers", "p_halt", "l_max", "reweight", "block_m",
-                     "interpret"),
+    static_argnames=("n_walkers", "p_halt", "l_max", "reweight", "scheme",
+                     "block_m", "interpret"),
 )
 def walk_sample(
     neighbors: jax.Array,
@@ -66,6 +67,7 @@ def walk_sample(
     p_halt: float,
     l_max: int,
     reweight: bool = True,
+    scheme: str = "iid",
     block_m: int = DEFAULT_BM,
     interpret: bool = False,
 ):
@@ -84,6 +86,7 @@ def walk_sample(
     kernel = functools.partial(
         _walk_kernel,
         n_walkers=n_walkers, p_halt=p_halt, l_max=l_max, reweight=reweight,
+        scheme=scheme,
     )
     out_spec = pl.BlockSpec((bm, k), lambda i: (i, 0))
     cols, loads, lens = pl.pallas_call(

@@ -143,6 +143,7 @@ def query_rows(state: ServeState, query_nodes: jax.Array) -> WalkTrace:
         query_nodes.astype(jnp.int32), state.seed,
         n_walkers=state.cfg.n_walkers, p_halt=state.cfg.p_halt,
         l_max=state.cfg.l_max, reweight=state.cfg.reweight,
+        scheme=state.cfg.scheme,
     )
     return WalkTrace(cols=cols, loads=loads, lens=lens)
 
