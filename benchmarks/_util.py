@@ -8,8 +8,36 @@ from __future__ import annotations
 
 import argparse
 import os
+import subprocess
 
 import jax
+
+
+def provenance(fast: bool | None = None) -> dict:
+    """Where/how this artifact was produced — stamped into every BENCH_*.json.
+
+    Cross-machine regression-gate trips are undiagnosable without knowing
+    both sides' git commit, jax version, backend/device and fast-vs-full
+    mode; check_regression.py prints this block from both artifacts in its
+    failure messages."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(__file__), capture_output=True, text=True,
+            timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        commit = "unknown"
+    dev = jax.devices()[0]
+    prov = {
+        "git_commit": commit,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+    }
+    if fast is not None:
+        prov["mode"] = "fast" if fast else "full"
+    return prov
 
 
 def timeit(fn, reps: int = 1) -> float:

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit
+from benchmarks._util import bench_main, provenance, timeit
 from repro.core import features, modulation, walks
 from repro.graphs import generators, signals
 from repro.kernels import dispatch
@@ -206,6 +206,7 @@ def run(fast: bool = True):
     rows.append(dict(name="estimator_walker_efficiency", **walker_efficiency))
 
     artifact = {
+        "provenance": provenance(fast),
         "bench": "estimator",
         "host_backend": jax.default_backend(),
         "unit": "ms_per_call",

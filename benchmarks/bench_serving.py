@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit, timeit_result
+from benchmarks._util import bench_main, provenance, timeit, timeit_result
 from repro import serving, solvers
 from repro.core import linops, modulation, walks
 from repro.gp import mll, posterior
@@ -167,6 +167,7 @@ def run(fast: bool = True):
                          speedup_bo_step=speedups[f"bo_step/N{n}"]))
 
     artifact = {
+        "provenance": provenance(fast),
         "host_backend": jax.default_backend(),
         "unit": "ms_per_call",
         "chunk": CHUNK,

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit_result
+from benchmarks._util import bench_main, provenance, timeit_result
 from repro import solvers
 from repro.core import linops, modulation, walks
 from repro.gp import mll
@@ -223,6 +223,7 @@ def run(fast: bool = True):
             )
 
     artifact = {
+        "provenance": provenance(fast),
         "host_backend": jax.default_backend(),
         "unit": "ms_per_call",
         "sigma_n2": SIGMA_N2,

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit
+from benchmarks._util import bench_main, provenance, timeit
 from repro.kernels import dispatch
 
 K_SLOTS = 64
@@ -83,6 +83,7 @@ def run(fast: bool = True):
                 ))
 
     artifact = {
+        "provenance": provenance(fast),
         "host_backend": jax.default_backend(),
         "k_slots": K_SLOTS,
         "unit": "us_per_call",

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, timeit, timeit_result
+from benchmarks._util import bench_main, provenance, timeit, timeit_result
 from repro.core import modulation, walks
 from repro.gp import posterior
 from repro.graphs import generators
@@ -115,6 +115,7 @@ def run(fast: bool = True):
         ))
 
     artifact = {
+        "provenance": provenance(fast),
         "host_backend": jax.default_backend(),
         "unit": "ms_per_call",
         "chunk": CHUNK,

@@ -56,6 +56,23 @@ def _load(path: str) -> dict:
         return json.load(fh)
 
 
+def _fmt_provenance(artifact: dict) -> str:
+    """One line of where an artifact came from (benchmarks/_util.provenance).
+
+    Pre-provenance artifacts degrade to their ``host_backend`` key, so the
+    gate's failure output is still diagnosable against old baselines."""
+    prov = artifact.get("provenance")
+    if not isinstance(prov, dict):
+        hb = artifact.get("host_backend", "?")
+        return f"host_backend={hb} (no provenance block)"
+    return ", ".join(f"{k}={prov[k]}" for k in sorted(prov))
+
+
+def _print_provenance(baseline: dict, fresh: dict, label: str) -> None:
+    print(f"  {label}: baseline [{_fmt_provenance(baseline)}]")
+    print(f"  {label}: fresh    [{_fmt_provenance(fresh)}]")
+
+
 def _expect(table, key: str, label: str, where: str, errors: list[str]):
     """Fetch ``table[key]`` or record a *named* error (never a KeyError —
     a gate that dies with a traceback reads as CI flake, not as the
@@ -238,6 +255,10 @@ def main() -> int:
                                        args.iters_threshold,
                                        args.bf16_threshold,
                                        args.mse_threshold)
+            if errors:
+                # Both sides' provenance first: a cross-machine or
+                # cross-mode trip should be readable as such at a glance.
+                _print_provenance(baseline, fresh, label)
             for err in errors:
                 print(err)
             failed = failed or bool(errors)
@@ -245,8 +266,10 @@ def main() -> int:
                 print(f"  {label}: correctness OK "
                       f"({len(fresh['results'])} rows, all finite)")
         else:
-            failed = failed or not check_timing(baseline, fresh, label,
-                                                args.threshold)
+            ok = check_timing(baseline, fresh, label, args.threshold)
+            if not ok:
+                _print_provenance(baseline, fresh, label)
+            failed = failed or not ok
     return 1 if failed else 0
 
 

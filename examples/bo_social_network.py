@@ -10,13 +10,19 @@ joint Thompson draws over a candidate set — no full-graph trace and no
 N-scale pathwise draw per step.  ``--engine refit`` restores the paper's
 from-scratch loop (materialised trace + pathwise sample per round).
 
-The BO state checkpoints every iteration — kill and rerun to resume."""
+The BO state checkpoints every iteration — kill and rerun to resume.
+
+``--record PATH`` streams a JSONL flight record (per-round draw spans,
+refit solve diagnostics, incumbent regret) and prints the obs summary
+table — per-round draw p50/p99 and observation counts — at exit."""
 import argparse
+import contextlib
 import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.bo import baselines, thompson
 from repro.checkpoint import CheckpointManager
 from repro.core import modulation, walks
@@ -34,8 +40,22 @@ def main():
     ap.add_argument("--candidates", type=int, default=2048,
                     help="Thompson candidate set per round (incremental)")
     ap.add_argument("--ckpt", default="/tmp/grf_bo_ckpt")
+    ap.add_argument("--record", metavar="PATH", default=None,
+                    help="stream a JSONL flight record of the run")
     args = ap.parse_args()
 
+    recording = (
+        obs.recording(args.record) if args.record is not None
+        else contextlib.nullcontext()
+    )
+    with recording:
+        run(args)
+    if args.record is not None:
+        print(f"\nflight record written to {args.record}")
+        print(obs.summary())
+
+
+def run(args):
     print(f"building Barabási–Albert graph with {args.nodes} nodes ...")
     t0 = time.time()
     g = generators.barabasi_albert(args.nodes, m=3, seed=0)
@@ -107,6 +127,13 @@ def main():
     mgr.wait()
     print(f"BO finished in {time.time()-t0:.1f}s; final simple regret "
           f"{st.regret[-1]:.4f}")
+
+    if obs.enabled():
+        snap = obs.REGISTRY.snapshot()
+        draw = snap["histograms"].get("span.bo.draw")
+        if draw:
+            print(f"  per-round draw p50 {draw['p50']*1e3:.1f} ms / "
+                  f"p99 {draw['p99']*1e3:.1f} ms over {draw['count']} rounds")
 
     for name, fn in (("random", baselines.random_search),
                      ("bfs", baselines.bfs_search),

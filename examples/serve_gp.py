@@ -3,18 +3,29 @@ engine (DESIGN.md §3.7).
 
     PYTHONPATH=src python examples/serve_gp.py                  # 1M nodes
     PYTHONPATH=src python examples/serve_gp.py --nodes 20000    # small/smoke
+    PYTHONPATH=src python examples/serve_gp.py --nodes 20000 \
+        --record run.jsonl --fit-steps 3       # + flight record with solves
 
 Builds a ServeState (cached train features + m×m Gram Cholesky), streams
 observations in via O(m²) incremental appends, then serves batched
 mean/variance queries — no CG and nothing N-scale in the hot path, so
-queries run at the same speed on 10⁶ nodes as on 10⁴."""
+queries run at the same speed on 10⁶ nodes as on 10⁴.
+
+With ``--record PATH`` the run streams a JSONL flight record (spans for
+sampling/solves/serving waves, per-wave latency histograms, CG diagnostics)
+and prints the obs summary table at exit; validate the artifact with
+``python -m repro.obs.report --validate PATH``.  ``--fit-steps K`` runs K
+LML-ascent steps on the streamed observations first (a noise/lengthscale
+calibration pass) — that is what puts per-solve CG diagnostics into the
+record, since the serving hot path itself is CG-free by design."""
 import argparse
+import contextlib
 import time
 
 import jax
 import numpy as np
 
-from repro import serving
+from repro import obs, serving
 from repro.core import modulation, walks
 from repro.graphs import generators
 
@@ -27,8 +38,25 @@ def main():
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64,
                     help="engine slots per wave")
+    ap.add_argument("--record", metavar="PATH", default=None,
+                    help="stream a JSONL flight record of the run")
+    ap.add_argument("--fit-steps", type=int, default=0,
+                    help="LML-ascent steps on the observations before "
+                         "serving (exercises the CG solve path)")
     args = ap.parse_args()
 
+    recording = (
+        obs.recording(args.record) if args.record is not None
+        else contextlib.nullcontext()
+    )
+    with recording:
+        run(args)
+    if args.record is not None:
+        print(f"\nflight record written to {args.record}")
+        print(obs.summary())
+
+
+def run(args):
     print(f"building Barabási–Albert graph with {args.nodes} nodes ...")
     t0 = time.time()
     g = generators.barabasi_albert(args.nodes, m=3, seed=0)
@@ -39,22 +67,49 @@ def main():
 
     cfg = walks.WalkConfig(n_walkers=8, p_halt=0.2, l_max=5)
     mod = modulation.diffusion(l_max=cfg.l_max)
-    f = mod(mod.init(jax.random.PRNGKey(1)))
+    params = mod.init(jax.random.PRNGKey(1))
+    f = mod(params)
+
+    obs_nodes = rng.choice(
+        args.nodes, args.observe, replace=False
+    ).astype(np.int32)
+    y = (signal[obs_nodes]
+         + 0.05 * rng.standard_normal(args.observe)).astype(np.float32)
+    sigma_n2 = 0.05
+
+    if args.fit_steps > 0:
+        # Hyperparameter calibration on the observation set: strategy-solved
+        # CG per Adam step — the solves whose diagnostics land in the
+        # flight record.
+        from repro.gp import mll
+
+        print(f"fitting hyperparameters for {args.fit_steps} steps ...")
+        trace_x = walks.sample_walks_for_nodes(
+            g, obs_nodes, jax.random.PRNGKey(0),
+            cfg.n_walkers, cfg.p_halt, cfg.l_max, cfg.reweight, cfg.scheme,
+        )
+        res = mll.fit_hyperparams(
+            trace_x, mod, y, g.n_nodes, jax.random.PRNGKey(2),
+            steps=args.fit_steps, chunk=args.fit_steps,
+            init_noise=float(np.sqrt(sigma_n2)),
+        )
+        f = mod(res.params["mod"])
+        sigma_n2 = float(mll.noise_var(res.params))
+        last = res.history[-1]
+        print(f"  step {last['step']}: loss {last['loss']:.3f}, "
+              f"sigma_n2 {last['sigma_n2']:.4f}, "
+              f"cg_iters {last['cg_iters']}")
 
     # Empty state: nothing N-scale is ever materialised — train rows are
     # sampled lazily per observation, query rows lazily per wave.
     state = serving.init_state(
-        g, jax.random.PRNGKey(0), f, 0.05, args.capacity, cfg
+        g, jax.random.PRNGKey(0), f, sigma_n2, args.capacity, cfg
     )
 
     print(f"streaming {args.observe} observations "
           f"(incremental Cholesky appends) ...")
-    obs = rng.choice(args.nodes, args.observe, replace=False).astype(np.int32)
-    y = (signal[obs] + 0.05 * rng.standard_normal(args.observe)).astype(
-        np.float32
-    )
     t0 = time.time()
-    state = serving.observe_batch(state, obs, y)
+    state = serving.observe_batch(state, obs_nodes, y)
     jax.block_until_ready(state.chol)
     t_first = time.time() - t0
     # two more single appends: the first compiles the batch-1 step, the
@@ -95,6 +150,15 @@ def main():
     m2, v2 = serving.posterior_moments(state, qnodes[:8].astype(np.int32))
     print(f"  posterior_moments head: mean {np.array(m2)[:3].round(3)}, "
           f"var {np.array(v2)[:3].round(3)}")
+
+    if obs.enabled():
+        # Per-wave latency straight from the registry — the numbers the
+        # ad-hoc prints above approximate, now with percentiles.
+        snap = obs.REGISTRY.snapshot()
+        wave = snap["histograms"].get("span.serving.wave")
+        if wave:
+            print(f"  wave latency p50 {wave['p50']*1e3:.1f} ms / "
+                  f"p99 {wave['p99']*1e3:.1f} ms over {wave['count']} waves")
 
 
 if __name__ == "__main__":

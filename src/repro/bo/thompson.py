@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import features, walks
 from ..core.modulation import Modulation
 from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
@@ -124,8 +125,13 @@ def _record_round(state: BOState, picks, ys, f_max, checkpoint_cb, t):
         state.x_buf[state.count] = x_t
         state.y_buf[state.count] = float(y_t)
         state.count += 1
+    obs.inc("bo.observations", len(picks))
+    obs.inc("bo.rounds")
     if f_max is not None:
-        state.regret.append(float(f_max - state.y_obs.max()))
+        regret = float(f_max - state.y_obs.max())
+        state.regret.append(regret)
+        obs.gauge("bo.incumbent_regret", regret)
+    obs.gauge("bo.incumbent_best", float(state.y_obs.max()))
     state.iteration = t + 1
     if checkpoint_cb is not None:
         checkpoint_cb(state)
@@ -239,18 +245,20 @@ def thompson_sampling(
 
         f = mod(state.params["mod"])
         s2 = mll.noise_var(state.params)
-        if chunked:
-            samples = posterior.pathwise_samples_chunked(
-                graph, x_all, f, s2, y_n, jax.random.fold_in(key, t),
-                walk_key, walk, chunk=chunk, n_samples=batch_size,
-                obs_mask=mask, strategy=sample_strategy,
-            )
-        else:
-            samples = posterior.pathwise_samples(
-                trace, x_all, f, s2, y_n,
-                jax.random.fold_in(key, t), n_samples=batch_size,
-                obs_mask=mask, strategy=sample_strategy,
-            )
+        with obs.span("bo.draw", round=t, mode="pathwise") as sp:
+            if chunked:
+                samples = posterior.pathwise_samples_chunked(
+                    graph, x_all, f, s2, y_n, jax.random.fold_in(key, t),
+                    walk_key, walk, chunk=chunk, n_samples=batch_size,
+                    obs_mask=mask, strategy=sample_strategy,
+                )
+            else:
+                samples = posterior.pathwise_samples(
+                    trace, x_all, f, s2, y_n,
+                    jax.random.fold_in(key, t), n_samples=batch_size,
+                    obs_mask=mask, strategy=sample_strategy,
+                )
+            sp.block_on(samples)
         # Mask observed nodes, pick one argmax per sample (Alg. 3 line 8).
         picks = _argmax_picks(np.array(samples), np.arange(n), state.x_obs,
                               batch_size)
@@ -383,9 +391,12 @@ def thompson_sampling_incremental(
             cand = cand_rng.choice(n, size=n_candidates, replace=False).astype(
                 np.int32
             )
-        draws = np.array(serving.thompson_draw(
-            serve, cand, jax.random.fold_in(key, t), n_samples=batch_size,
-        ))                                    # [q, batch_size], writable
+        with obs.span("bo.draw", round=t, mode="joint"):
+            # np.array blocks on the device draw inside the span window.
+            draws = np.array(serving.thompson_draw(
+                serve, cand, jax.random.fold_in(key, t),
+                n_samples=batch_size,
+            ))                                # [q, batch_size], writable
         picks = _argmax_picks(draws, cand, np.isin(cand, state.x_obs),
                               batch_size)
         ys = np.asarray(objective(np.array(picks)), dtype=np.float32)

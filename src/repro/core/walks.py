@@ -29,6 +29,7 @@ from typing import Iterator
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..graphs.formats import Graph
 from ..kernels import dispatch
 from ..kernels.walk_sampler.rng import SCHEMES
@@ -109,10 +110,13 @@ def walk_seed(key: jax.Array) -> jax.Array:
     return jax.random.bits(key, (), jnp.uint32)
 
 
-@partial(jax.jit, static_argnames=("cfg", "spmv_backend"))
+@partial(jax.jit, static_argnames=("cfg", "spmv_backend", "obs_tap"))
 def _sample(graph: Graph, nodes: jax.Array, seed: jax.Array,
-            *, cfg: WalkConfig, spmv_backend: str) -> WalkTrace:
-    with dispatch.use_backend(spmv_backend):
+            *, cfg: WalkConfig, spmv_backend: str,
+            obs_tap: bool = False) -> WalkTrace:
+    # obs_tap rides the jit cache key (like spmv_backend) and pins the
+    # trace, so flipping observability retraces with taps staged in/out.
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         cols, loads, lens = dispatch.walk_sample(
             graph.neighbors, graph.weights, graph.deg, nodes, seed,
             n_walkers=cfg.n_walkers, p_halt=cfg.p_halt, l_max=cfg.l_max,
@@ -136,8 +140,12 @@ def sample_walks(
     """
     cfg = WalkConfig(n_walkers, p_halt, l_max, reweight, scheme)
     nodes = jnp.arange(graph.n_nodes, dtype=jnp.int32)
-    return _sample(graph, nodes, walk_seed(key), cfg=cfg,
-                   spmv_backend=dispatch.get_backend())
+    with obs.span("walks.sample", rows=graph.n_nodes, scheme=scheme) as sp:
+        trace = _sample(graph, nodes, walk_seed(key), cfg=cfg,
+                        spmv_backend=dispatch.get_backend(),
+                        obs_tap=obs.enabled())
+        sp.block_on(trace)
+    return trace
 
 
 def sample_walks_for_nodes(
@@ -157,8 +165,13 @@ def sample_walks_for_nodes(
     with the full Φ without materialising it (every scheme keeps this: the
     driving streams are keyed on absolute node id)."""
     cfg = WalkConfig(n_walkers, p_halt, l_max, reweight, scheme)
-    return _sample(graph, nodes.astype(jnp.int32), walk_seed(key), cfg=cfg,
-                   spmv_backend=dispatch.get_backend())
+    with obs.span("walks.sample", rows=int(nodes.shape[0]),
+                  scheme=scheme) as sp:
+        trace = _sample(graph, nodes.astype(jnp.int32), walk_seed(key),
+                        cfg=cfg, spmv_backend=dispatch.get_backend(),
+                        obs_tap=obs.enabled())
+        sp.block_on(trace)
+    return trace
 
 
 def walk_chunks(
@@ -178,4 +191,9 @@ def walk_chunks(
     backend = dispatch.get_backend()
     for start in range(0, n, chunk):
         nodes = jnp.arange(start, min(start + chunk, n), dtype=jnp.int32)
-        yield start, _sample(graph, nodes, seed, cfg=cfg, spmv_backend=backend)
+        with obs.span("walks.sample", rows=int(nodes.shape[0]),
+                      scheme=cfg.scheme, chunk_start=start) as sp:
+            trace = _sample(graph, nodes, seed, cfg=cfg, spmv_backend=backend,
+                            obs_tap=obs.enabled())
+            sp.block_on(trace)
+        yield start, trace

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import linops
 from ..core.modulation import Modulation
 from ..kernels import dispatch as _dispatch
@@ -143,12 +144,13 @@ class FitResult:
     jax.jit,
     static_argnames=(
         "mod", "opt", "n_nodes", "n_probes", "strategy", "chunk",
-        "spmv_backend",
+        "spmv_backend", "obs_tap",
     ),
 )
 def _fit_chunk(
     params, opt_state, key, trace_x, y, obs_mask, v0,
     *, mod, opt, n_nodes, n_probes, strategy, chunk, spmv_backend,
+    obs_tap=False,
 ):
     """``chunk`` Adam steps fused into one lax.scan (single dispatch/compile).
 
@@ -189,7 +191,7 @@ def _fit_chunk(
         )
 
     keys = jax.random.split(key, chunk)
-    with _dispatch.use_backend(spmv_backend):
+    with obs.tap_scope(obs_tap), _dispatch.use_backend(spmv_backend):
         (params, opt_state, v), traces = jax.lax.scan(
             one, (params, opt_state, v0), keys
         )
@@ -251,23 +253,34 @@ def fit_hyperparams(
     done = 0
     while done < steps:
         this = min(chunk, steps - done)
-        params, opt_state, v, traces = _fit_chunk(
-            params, opt_state, jax.random.fold_in(k_loop, done),
-            trace_x, y, obs_mask, v,
-            mod=mod, opt=opt, n_nodes=n_nodes, n_probes=n_probes,
-            strategy=strategy, chunk=this,
-            spmv_backend=_dispatch.get_backend(),
-        )
+        with obs.span("mll.fit_chunk", steps=this) as sp:
+            params, opt_state, v, traces = _fit_chunk(
+                params, opt_state, jax.random.fold_in(k_loop, done),
+                trace_x, y, obs_mask, v,
+                mod=mod, opt=opt, n_nodes=n_nodes, n_probes=n_probes,
+                strategy=strategy, chunk=this,
+                spmv_backend=_dispatch.get_backend(),
+                obs_tap=obs.enabled(),
+            )
+            sp.block_on(traces)
         loss_t, fit_t, s2_t, iters_t, conv_t = (
             np.asarray(t) for t in traces
         )
         for j in range(this):
-            history.append(
-                {"step": done + j + 1, "loss": float(loss_t[j]),
-                 "datafit": float(fit_t[j]), "sigma_n2": float(s2_t[j]),
-                 "cg_iters": int(iters_t[j]),
-                 "cg_converged": bool(conv_t[j])}
-            )
+            rec = {"step": done + j + 1, "loss": float(loss_t[j]),
+                   "datafit": float(fit_t[j]), "sigma_n2": float(s2_t[j]),
+                   "cg_iters": int(iters_t[j]),
+                   "cg_converged": bool(conv_t[j])}
+            history.append(rec)
+            # Per-step diagnostics live in the registry (and the flight
+            # record), not only in the returned history array.
+            obs.gauge("mll.loss", rec["loss"])
+            obs.gauge("mll.sigma_n2", rec["sigma_n2"])
+            obs.observe("mll.cg_iters", rec["cg_iters"])
+            obs.inc("mll.steps")
+            if not rec["cg_converged"]:
+                obs.inc("mll.cg_nonconverged")
+            obs.emit_event({"type": "fit_step", **rec})
         done += this
     return FitResult(params=params, history=history)
 
@@ -313,24 +326,29 @@ def exact_lml(
                 jnp.where(obs_mask > 0, sigma_n2, 1.0), mask=obs_mask,
             )
         strategy = solvers.resolve_strategy(h0, strategy, key=key)
-    return _exact_lml(
-        trace_x, f, sigma_n2, y, obs_mask, key,
-        strategy=strategy, n_probes=n_probes, slq_iters=slq_iters,
-        n_nodes=n_nodes, spmv_backend=_dispatch.get_backend(),
-    )
+    with obs.span("mll.exact_lml") as sp:
+        out = _exact_lml(
+            trace_x, f, sigma_n2, y, obs_mask, key,
+            strategy=strategy, n_probes=n_probes, slq_iters=slq_iters,
+            n_nodes=n_nodes, spmv_backend=_dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(out)
+    return out
 
 
 @partial(
     jax.jit,
     static_argnames=(
         "strategy", "n_probes", "slq_iters", "n_nodes", "spmv_backend",
+        "obs_tap",
     ),
 )
 def _exact_lml(
     trace_x, f, sigma_n2, y, obs_mask, key,
-    *, strategy, n_probes, slq_iters, n_nodes, spmv_backend,
+    *, strategy, n_probes, slq_iters, n_nodes, spmv_backend, obs_tap=False,
 ):
-    with _dispatch.use_backend(spmv_backend):
+    with obs.tap_scope(obs_tap), _dispatch.use_backend(spmv_backend):
         t = y.shape[0]
         if obs_mask is None:
             t_live = jnp.asarray(t, jnp.float32)

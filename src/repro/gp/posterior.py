@@ -14,6 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core import features, linops, walks
 from ..core.walks import DEFAULT_CHUNK, WalkConfig, WalkTrace
 from ..graphs.formats import Graph
@@ -68,18 +69,23 @@ def posterior_mean(
         strategy, features.take_rows(trace, train_nodes), f, sigma_n2,
         obs_mask, trace.n_nodes,
     )
-    return _posterior_mean(
-        trace, train_nodes, f, sigma_n2, y, obs_mask,
-        strategy=strategy,
-        spmv_backend=dispatch.get_backend(),
-    )
+    with obs.span("posterior.mean") as sp:
+        out = _posterior_mean(
+            trace, train_nodes, f, sigma_n2, y, obs_mask,
+            strategy=strategy,
+            spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(out)
+    return out
 
 
-@partial(jax.jit, static_argnames=("strategy", "spmv_backend"))
+@partial(jax.jit, static_argnames=("strategy", "spmv_backend", "obs_tap"))
 def _posterior_mean(
     trace, train_nodes, f, sigma_n2, y, obs_mask, *, strategy, spmv_backend,
+    obs_tap=False,
 ):
-    with dispatch.use_backend(spmv_backend):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         return _posterior_mean_impl(
             trace, train_nodes, f, sigma_n2, y, obs_mask, strategy
         )
@@ -123,23 +129,29 @@ def pathwise_samples(
         strategy, features.take_rows(trace, train_nodes), f, sigma_n2,
         obs_mask, trace.n_nodes,
     )
-    out = _pathwise_samples(
-        trace, train_nodes, f, sigma_n2, y, key, obs_mask,
-        n_samples=n_samples, strategy=strategy,
-        spmv_backend=dispatch.get_backend(),
-    )
+    with obs.span("posterior.pathwise", n_samples=n_samples) as sp:
+        out = _pathwise_samples(
+            trace, train_nodes, f, sigma_n2, y, key, obs_mask,
+            n_samples=n_samples, strategy=strategy,
+            spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(out)
     samples, iters, converged = out
     if return_diagnostics:
         return samples, iters, converged
     return samples
 
 
-@partial(jax.jit, static_argnames=("n_samples", "strategy", "spmv_backend"))
+@partial(
+    jax.jit,
+    static_argnames=("n_samples", "strategy", "spmv_backend", "obs_tap"),
+)
 def _pathwise_samples(
     trace, train_nodes, f, sigma_n2, y, key, obs_mask,
-    *, n_samples, strategy, spmv_backend,
+    *, n_samples, strategy, spmv_backend, obs_tap=False,
 ):
-    with dispatch.use_backend(spmv_backend):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         return _pathwise_samples_impl(
             trace, train_nodes, f, sigma_n2, y, key, n_samples, obs_mask,
             strategy,
@@ -213,12 +225,16 @@ def pathwise_samples_chunked(
         strategy = _resolve_auto(
             strategy, trace_x, f, sigma_n2, obs_mask, graph.n_nodes
         )
-    out = _pathwise_samples_chunked(
-        graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
-        cfg=cfg, chunk=chunk, n_samples=n_samples,
-        strategy=strategy,
-        spmv_backend=dispatch.get_backend(),
-    )
+    with obs.span("posterior.pathwise_chunked", n_samples=n_samples,
+                  chunk=chunk) as sp:
+        out = _pathwise_samples_chunked(
+            graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
+            cfg=cfg, chunk=chunk, n_samples=n_samples,
+            strategy=strategy,
+            spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(out)
     samples, iters, converged = out
     if return_diagnostics:
         return samples, iters, converged
@@ -227,13 +243,15 @@ def pathwise_samples_chunked(
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "chunk", "n_samples", "strategy", "spmv_backend"),
+    static_argnames=(
+        "cfg", "chunk", "n_samples", "strategy", "spmv_backend", "obs_tap",
+    ),
 )
 def _pathwise_samples_chunked(
     graph, train_nodes, f, sigma_n2, y, key, walk_key, obs_mask,
-    *, cfg, chunk, n_samples, strategy, spmv_backend,
+    *, cfg, chunk, n_samples, strategy, spmv_backend, obs_tap=False,
 ):
-    with dispatch.use_backend(spmv_backend):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         n = graph.n_nodes
         t = train_nodes.shape[0]
         noise = (

@@ -180,8 +180,19 @@ def walk_sample(
     DESIGN.md §3.9); like the backend it is resolved at trace time and
     rides the jit cache key as a static."""
     backend = _check(backend) if backend is not None else get_backend()
+    from ..obs import taps as _obs_taps
     from .walk_sampler import ops
 
+    # Rows per call are static (ELL layout): one executed-count per wave,
+    # labelled by the trace-time scheme/backend statics.
+    _labels = {"scheme": scheme, "backend": backend}
+    _obs_taps.count("walks.rows_sampled", n=int(nodes.shape[0]), labels=_labels)
+    _obs_taps.count(
+        "walks.walkers_launched",
+        n=int(nodes.shape[0]) * int(n_walkers),
+        labels=_labels,
+    )
+    _obs_taps.count("walks.sample_calls", labels=_labels)
     if backend == "xla":
         return ops.walk_sample_xla(
             neighbors, weights, deg, nodes, seed,

@@ -1,0 +1,142 @@
+"""Jit-safe value taps: device values into the host registry (DESIGN.md
+§3.10).
+
+A *tap* records traced array values (CG iteration counts, residual norms,
+convergence flags, row counts) from inside jit-compiled code.  Device →
+host crossing uses ``jax.debug.callback`` (unordered, transformation-safe:
+works under grad/vmap/scan — the mll fit taps fire inside a
+``value_and_grad`` inside a ``lax.scan``) or ``jax.experimental.
+io_callback`` when ``ordered=True`` (strict program-order event streams;
+not differentiable, so ordered taps belong outside autodiff).
+
+The overhead contract: every tap checks :func:`registry.enabled` **at
+Python trace time** — with observability disabled (the default) nothing is
+staged, the compiled HLO is identical to an uninstrumented build, and the
+hot path pays literally zero.  The flip side is that enablement must ride
+jit cache keys: instrumented jitted consumers take ``obs_tap: bool`` as a
+static argument and pin the trace with ``registry.tap_scope`` (exactly the
+``spmv_backend`` discipline), so flipping observability retraces instead
+of silently reusing an uninstrumented executable.
+
+``sample=`` thins high-frequency taps host-side (the callback still fires;
+only every sample-th occurrence is recorded) — the per-iteration CG
+residual trajectory uses this so an enabled flight record stays bounded.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from . import registry
+
+
+def _pyval(v):
+    """Callback operand → JSON-able python value (scalars stay scalars)."""
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        x = arr.item()
+        return bool(x) if arr.dtype == np.bool_ else x
+    return arr.tolist()
+
+
+def _stage(cb, values, ordered: bool) -> None:
+    if ordered:
+        from jax.experimental import io_callback
+
+        io_callback(cb, None, *values, ordered=True)
+    else:
+        jax.debug.callback(cb, *values)
+
+
+def tap_dict(
+    name: str,
+    values: dict,
+    *,
+    hist: tuple[str, ...] = (),
+    meta: dict | None = None,
+    sample: int = 1,
+    event: bool = True,
+    ordered: bool = False,
+) -> None:
+    """Record a named group of traced values in one host callback.
+
+    Per occurrence: the counter ``<name>.count`` increments; each value in
+    ``hist`` lands in the ``<name>.<key>`` histogram; boolean values count
+    into the ``<name>.<key>`` counter (total = ``<name>.count``); everything
+    else sets the ``<name>.<key>`` gauge.  With ``event=True`` a ``tap``
+    record also streams to the sinks, carrying the (static, trace-time)
+    ``meta`` dict alongside the values.  No-op — nothing staged — when
+    observability is disabled at trace time."""
+    if not registry.enabled():
+        return
+    names = tuple(values)
+    vals = tuple(values[k] for k in names)
+    hist = tuple(hist)
+    meta = dict(meta) if meta else None
+
+    def _record(*raw):
+        reg = registry.REGISTRY
+        if not reg.tap_tick(name, sample):
+            return
+        payload = {k: _pyval(v) for k, v in zip(names, raw)}
+        reg.inc(f"{name}.count")
+        for k, v in payload.items():
+            if isinstance(v, bool):
+                reg.inc(f"{name}.{k}", 1 if v else 0)
+            elif k in hist and np.isscalar(v):
+                reg.observe(f"{name}.{k}", float(v))
+            elif np.isscalar(v):
+                reg.set_gauge(f"{name}.{k}", float(v))
+        if event:
+            rec = {"type": "tap", "name": name, "values": payload}
+            if meta:
+                rec["meta"] = meta
+            reg.emit(rec)
+
+    _stage(_record, vals, ordered)
+
+
+def tap(
+    name: str,
+    value,
+    *,
+    kind: str = "gauge",
+    sample: int = 1,
+    event: bool = True,
+    ordered: bool = False,
+) -> None:
+    """Record one traced scalar (``kind`` in {"gauge", "hist", "counter"})."""
+    if not registry.enabled():
+        return
+
+    def _record(v):
+        reg = registry.REGISTRY
+        if not reg.tap_tick(name, sample):
+            return
+        x = _pyval(v)
+        if kind == "hist":
+            reg.observe(name, float(x))
+        elif kind == "counter":
+            reg.inc(name, float(x))
+        else:
+            reg.set_gauge(name, float(x))
+        if event:
+            reg.emit({"type": "tap", "name": name, "values": {"value": x}})
+
+    _stage(_record, (value,), ordered)
+
+
+def count(name: str, n: int = 1, labels: dict | None = None) -> None:
+    """Increment a counter once per *execution* of the enclosing trace.
+
+    A plain ``registry.inc`` at trace time would count compilations, not
+    calls — this stages a no-operand callback so each executed step counts
+    (e.g. walk rows sampled per serving wave).  Nothing staged when
+    disabled."""
+    if not registry.enabled():
+        return
+
+    def _record():
+        registry.REGISTRY.inc(name, n, labels)
+
+    jax.debug.callback(_record)

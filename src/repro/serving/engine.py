@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..kernels import dispatch
 from .state import ServeState, _cross_solve, _moments_impl
 
@@ -58,9 +59,9 @@ class GPRequest:
             self.done = True
 
 
-@partial(jax.jit, static_argnames=("spmv_backend",))
-def _engine_step(state, slot_nodes, key, *, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
+def _engine_step(state, slot_nodes, key, *, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         mean, var = _moments_impl(state, slot_nodes)
         eps = jax.random.normal(key, mean.shape, dtype=jnp.float32)
         return mean, var, mean + jnp.sqrt(var) * eps
@@ -92,10 +93,12 @@ class GPServeLoop:
             try:
                 slot = self.slots.index(None)
             except ValueError:
+                obs.inc("serving.admit.rejects")
                 return False
             self.slots[slot] = (req, req.admitted)
             self.slot_nodes[slot] = req.nodes[req.admitted]
             req.admitted += 1
+            obs.inc("serving.admit.accepts")
         return True
 
     # -- batched query step --------------------------------------------------
@@ -105,11 +108,19 @@ class GPServeLoop:
         if not live:
             return 0
         self.key, sub = jax.random.split(self.key)
-        mean, var, draw = _engine_step(
-            self.state, jnp.asarray(self.slot_nodes), sub,
-            spmv_backend=dispatch.get_backend(),
-        )
-        mean, var, draw = np.asarray(mean), np.asarray(var), np.asarray(draw)
+        fill = len(live) / self.batch
+        # np.asarray blocks on the device result, so the wave span times
+        # dispatch + execution honestly without an extra sync.
+        with obs.span("serving.wave", fill=fill, served=len(live)):
+            mean, var, draw = _engine_step(
+                self.state, jnp.asarray(self.slot_nodes), sub,
+                spmv_backend=dispatch.get_backend(), obs_tap=obs.enabled(),
+            )
+            mean, var, draw = (
+                np.asarray(mean), np.asarray(var), np.asarray(draw)
+            )
+        obs.inc("serving.queries_served", len(live))
+        obs.observe("serving.wave.fill", fill)
         for i in live:
             req, pos = self.slots[i]
             req.mean[pos] = mean[i]
@@ -127,6 +138,7 @@ class GPServeLoop:
         while pending or any(s is not None for s in self.slots):
             while pending and self.admit(pending[0]):
                 pending.pop(0)
+            obs.gauge("serving.queue_depth", len(pending))
             n = self.step()
             if progress:
                 progress(n, len(pending))
@@ -145,15 +157,22 @@ def thompson_draw(
     q×q Cholesky: O(q·m² + q³), no CG, nothing N-scale.  This is what makes
     a BO step serving-shaped — the refit loop's equivalent is an N-long
     pathwise sample per draw."""
-    return _thompson_draw(
-        state, jnp.asarray(nodes, jnp.int32).reshape(-1), key,
-        n_samples=n_samples, spmv_backend=dispatch.get_backend(),
-    )
+    nodes = jnp.asarray(nodes, jnp.int32).reshape(-1)
+    with obs.span("serving.thompson_draw", q=int(nodes.shape[0]),
+                  n_samples=n_samples) as sp:
+        out = _thompson_draw(
+            state, nodes, key,
+            n_samples=n_samples, spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(out)
+    return out
 
 
-@partial(jax.jit, static_argnames=("n_samples", "spmv_backend"))
-def _thompson_draw(state, nodes, key, *, n_samples, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("n_samples", "spmv_backend", "obs_tap"))
+def _thompson_draw(state, nodes, key, *, n_samples, spmv_backend,
+                   obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         trace_q, vals_q, mean, v = _cross_solve(state, nodes)
         k_qq = dispatch.gram_block(vals_q, trace_q.cols, vals_q, trace_q.cols)
         cov = k_qq - v.T @ v

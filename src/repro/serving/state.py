@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from .. import obs
 from ..core import features
 from ..core.walks import WalkConfig, WalkTrace, walk_seed
 from ..graphs.formats import Graph
@@ -164,13 +165,14 @@ def posterior_moments(state: ServeState, query_nodes: jax.Array):
     unlike the sample-ensemble ``predictive_moments_from_samples``, and
     O(q·m²) with nothing N-scale.  Returns (mean[q], var[q])."""
     return _posterior_moments(
-        state, query_nodes, spmv_backend=dispatch.get_backend()
+        state, query_nodes, spmv_backend=dispatch.get_backend(),
+        obs_tap=obs.enabled(),
     )
 
 
-@partial(jax.jit, static_argnames=("spmv_backend",))
-def _posterior_moments(state, query_nodes, *, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
+def _posterior_moments(state, query_nodes, *, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         return _moments_impl(state, query_nodes)
 
 

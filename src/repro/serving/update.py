@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
+from .. import obs
 from ..core import features
 from ..core.walks import WalkTrace
 from ..kernels import dispatch
@@ -98,9 +99,9 @@ def _append(state: ServeState, node, y_t) -> ServeState:
     )
 
 
-@partial(jax.jit, static_argnames=("spmv_backend",))
-def _observe_batch(state, nodes, ys, *, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
+def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         # Scan only over the mutable leaves — the graph arrays stay scan
         # *constants* instead of riding the loop carry (at 10⁶ nodes the
         # adjacency is far larger than the whole serving state).
@@ -143,9 +144,14 @@ def observe_batch(state: ServeState, nodes, ys) -> ServeState:
                 f"capacity {state.capacity} (count={int(state.count)}); "
                 "build the state with a larger capacity"
             )
-    return _unpack(state, _observe_batch(
-        state, nodes, ys, spmv_backend=dispatch.get_backend(),
-    ))
+    with obs.span("serving.observe_batch", n=int(nodes.shape[0])) as sp:
+        packed = _observe_batch(
+            state, nodes, ys, spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(packed)
+    obs.inc("serving.observations", int(nodes.shape[0]))
+    return _unpack(state, packed)
 
 
 def observe(state: ServeState, node, y) -> ServeState:
@@ -216,9 +222,9 @@ def forget(state: ServeState, slot) -> ServeState:
     return _unpack(state, _forget(state, jnp.asarray(slot, jnp.int32)))
 
 
-@partial(jax.jit, static_argnames=("spmv_backend",))
-def _ingest(state, nodes, ys, count, *, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
+def _ingest(state, nodes, ys, count, *, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         trace = query_rows(state, nodes)
         live = jnp.arange(state.capacity) < count
         state = dataclasses.replace(
@@ -249,18 +255,23 @@ def ingest(state: ServeState, nodes, ys) -> ServeState:
             f"{count} observations exceed serving capacity {state.capacity}"
         )
     pad = state.capacity - count
-    return _unpack(state, _ingest(
-        state,
-        jnp.pad(nodes, (0, pad)),
-        jnp.pad(ys, (0, pad)),
-        jnp.asarray(count, jnp.int32),
-        spmv_backend=dispatch.get_backend(),
-    ))
+    with obs.span("serving.ingest", n=count) as sp:
+        packed = _ingest(
+            state,
+            jnp.pad(nodes, (0, pad)),
+            jnp.pad(ys, (0, pad)),
+            jnp.asarray(count, jnp.int32),
+            spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(packed)
+    obs.inc("serving.observations", count)
+    return _unpack(state, packed)
 
 
-@partial(jax.jit, static_argnames=("spmv_backend",))
-def _refit(state, *, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
+def _refit(state, *, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         return _pack(_refit_impl(state))
 
 
@@ -280,7 +291,11 @@ def refit(state: ServeState, f=None, sigma_n2=None, y=None) -> ServeState:
         updates["y"] = jnp.asarray(y, jnp.float32)
     if updates:
         state = dataclasses.replace(state, **updates)
-    return _unpack(state, _refit(state, spmv_backend=dispatch.get_backend()))
+    with obs.span("serving.refit") as sp:
+        packed = _refit(state, spmv_backend=dispatch.get_backend(),
+                        obs_tap=obs.enabled())
+        sp.block_on(packed)
+    return _unpack(state, packed)
 
 
 # ---------------------------------------------------------------------------
@@ -288,9 +303,9 @@ def refit(state: ServeState, f=None, sigma_n2=None, y=None) -> ServeState:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("strategy", "spmv_backend"))
-def _refit_alpha(state, *, strategy, spmv_backend):
-    with dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("strategy", "spmv_backend", "obs_tap"))
+def _refit_alpha(state, *, strategy, spmv_backend, obs_tap=False):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         live = state.live_mask()
         gram = dispatch.gram_block(
             state.vals(), state.trace.cols, state.vals(), state.trace.cols
@@ -346,9 +361,12 @@ def refit_alpha(
         updates["sigma_n2"] = jnp.asarray(sigma_n2, jnp.float32)
     if updates:
         state = dataclasses.replace(state, **updates)
-    alpha, iters, converged = _refit_alpha(
-        state, strategy=strategy, spmv_backend=dispatch.get_backend()
-    )
+    with obs.span("serving.refit_alpha") as sp:
+        alpha, iters, converged = _refit_alpha(
+            state, strategy=strategy, spmv_backend=dispatch.get_backend(),
+            obs_tap=obs.enabled(),
+        )
+        sp.block_on(alpha)
     state = dataclasses.replace(state, alpha=alpha)
     if return_diagnostics:
         return state, iters, converged

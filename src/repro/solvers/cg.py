@@ -27,6 +27,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..obs import taps as _obs_taps
 from .strategy import SolveStrategy
 
 
@@ -144,10 +145,16 @@ def cg_solve(
         rz_new = dot(res_new, z_new)
         beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
         p_new = z_new + beta[None, :] * p
+        _obs_taps.tap(
+            "solver.cg.resnorm_traj",
+            jnp.max(jnp.sqrt(dot(res_new, res_new))),
+            sample=8,
+        )
         return (x, res_new, z_new, p_new, rz_new, it + 1)
 
     state = (x0_, r0, z0, p0, rz0, jnp.asarray(0, jnp.int32))
-    x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
+    with jax.named_scope("cg_solve"):
+        x, res, _, _, _, iters = jax.lax.while_loop(cond, body, state)
     out = x[:, 0] if squeeze else x
     resnorm = jnp.sqrt(dot(res, res))
     return CGResult(out, iters, resnorm, resnorm <= thresh)
@@ -199,11 +206,17 @@ def cg_solve_fixed(
         rz_new = dot(res, z)
         beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
         p = z + beta[None, :] * p
+        _obs_taps.tap(
+            "solver.cg.resnorm_traj",
+            jnp.max(jnp.sqrt(dot(res, res))),
+            sample=8,
+        )
         return (x, res, z, p, rz_new), (alpha, beta, active)
 
-    (x, res, *_), (alphas, betas, valid) = jax.lax.scan(
-        body, state, None, length=iters, unroll=iters if unroll else 1
-    )
+    with jax.named_scope("cg_solve_fixed"):
+        (x, res, *_), (alphas, betas, valid) = jax.lax.scan(
+            body, state, None, length=iters, unroll=iters if unroll else 1
+        )
     out = x[:, 0] if squeeze else x
     resnorm = jnp.sqrt(dot(res, res))
     thresh = tol * jnp.maximum(jnp.sqrt(bnorm2), 1e-30)
@@ -256,6 +269,32 @@ def _with_matvec_dtype(h, dtype: str):
     return lambda v: h(v.astype(d)).astype(v.dtype)
 
 
+def _tap_solve(res: CGResult, strategy: SolveStrategy) -> None:
+    """Per-solve diagnostics into the obs registry (no-op when disabled).
+
+    Mirrors the returned :class:`CGResult` exactly — iters into the
+    ``solver.cg.iters`` histogram, all-columns convergence as a counter,
+    worst-column residual as a gauge — with the solve configuration
+    (preconditioner, rank, matvec dtype) as static tap metadata."""
+    _obs_taps.tap_dict(
+        "solver.cg",
+        {
+            "iters": res.iters,
+            "resnorm_max": jnp.max(res.resnorm),
+            "converged": jnp.all(res.converged),
+        },
+        hist=("iters",),
+        meta={
+            "preconditioner": strategy.preconditioner,
+            "precond_rank": res.precond_rank,
+            "matvec_dtype": strategy.matvec_dtype,
+            "adaptive": strategy.adaptive,
+            "tol": strategy.tol,
+            "max_iters": strategy.max_iters,
+        },
+    )
+
+
 def solve(
     h,
     b: jax.Array,
@@ -296,9 +335,12 @@ def solve(
             matvec, b, tol=strategy.tol, max_iters=strategy.max_iters,
             dot=dot, precond=precond, x0=x0,
         )
-        return res._replace(precond_rank=rank)
-    res = cg_solve_fixed(
-        matvec, b, iters=strategy.max_iters, dot=dot, precond=precond, x0=x0,
-        unroll=unroll, tol=strategy.tol,
-    )
-    return res._replace(precond_rank=rank)
+        res = res._replace(precond_rank=rank)
+    else:
+        res = cg_solve_fixed(
+            matvec, b, iters=strategy.max_iters, dot=dot, precond=precond,
+            x0=x0, unroll=unroll, tol=strategy.tol,
+        )
+        res = res._replace(precond_rank=rank)
+    _tap_solve(res, strategy)
+    return res
