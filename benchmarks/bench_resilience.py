@@ -1,0 +1,269 @@
+"""Fault-tolerant serving benchmark (DESIGN.md §3.11) → ``BENCH_resilience.json``.
+
+Chaos engineering as a benchmark: Poisson-mixed observe/query traffic is
+driven through a :class:`ResilientServer` twice — once clean, once under an
+injected fault plan (NaN-poisoned walk payloads, corrupted Cholesky
+appends, forced CG stalls) — and the artifact records what degradation
+actually looked like:
+
+  * ``availability``   answered-query fraction with and without faults
+                       (an answered query returns finite mean and a
+                       non-negative variance for every node) — the ≥99%
+                       acceptance gate, blocking in CI;
+  * ``results``        p50/p99 latency of observes and query waves in both
+                       modes, plus the crash-recovery replay cost — the
+                       price of the guards is measured, not asserted;
+  * ``resilience``     the ledger: escalation attempts/resolutions for the
+                       forced stalls, refit fallbacks taken, rejected
+                       appends, evictions, sanitized queries, recovery
+                       moment parity vs the live state, and the unhandled
+                       exception count (must be zero — degradation is
+                       flags and fallbacks, never a raise).
+
+The crash-recovery scenario runs journalled-but-clean traffic (fault
+replay is pinned off by design — recovery reconstructs what was acked),
+checkpoints mid-stream, then rebuilds from checkpoint + journal tail and
+compares posterior moments against the live server.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import bench_main, provenance
+from repro import obs, serving, solvers
+from repro.core import modulation, walks
+from repro.graphs import generators
+from repro.resilience import faults
+from repro.resilience.journal import read_journal, recover
+from repro.resilience.server import ResilientServer
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_resilience.json"
+)
+
+# Small enough that the traffic loop overflows it — the forget_oldest
+# eviction path is part of what this bench exercises.
+CAPACITY = 32
+Q_BATCH = 64
+FAULT_SPEC = "nan_payload:0.05,chol_fail:0.02,cg_stall:1"
+RECOVERY_TOL = 1e-5
+
+
+def _pctl(lat_ms, q):
+    return float(np.percentile(np.asarray(lat_ms), q)) if lat_ms else 0.0
+
+
+def _drive_traffic(empty, plan, rng, n_ticks, n_nodes, *,
+                   journal=None, checkpoint_dir=None):
+    """Poisson-mixed traffic: each tick appends one observation and serves
+    ``Poisson(2)`` query waves of Q_BATCH nodes.  Every op is timed and
+    try/except-wrapped — an unhandled exception is itself a headline
+    metric (the guards' contract is that there are none)."""
+    srv = ResilientServer(
+        empty, journal=journal, on_overflow="forget_oldest",
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=None if checkpoint_dir is None else 16,
+    )
+    stats = dict(queries_total=0, queries_answered=0,
+                 observes_total=0, unhandled_exceptions=0)
+    obs_lat, q_lat = [], []
+    with faults.use_faults(plan):
+        # Warm the jit caches so compile time doesn't pollute p99 — the
+        # append, the query wave, and the at-capacity eviction path.
+        srv_warm = ResilientServer(empty, on_overflow="forget_oldest")
+        srv_warm.observe([0], [0.0])
+        jax.block_until_ready(srv_warm.query(np.zeros(Q_BATCH, np.int32)))
+        srv_full = ResilientServer(
+            serving.ingest(empty, np.arange(CAPACITY, dtype=np.int32),
+                           np.zeros(CAPACITY, np.float32)),
+            on_overflow="forget_oldest",
+        )
+        srv_full.observe([1], [0.1])
+        jax.block_until_ready(srv_full.state.chol)
+        for _ in range(n_ticks):
+            node = int(rng.integers(n_nodes))
+            y = float(rng.standard_normal())
+            t0 = time.perf_counter()
+            try:
+                srv.observe([node], [y])
+                jax.block_until_ready(srv.state.chol)
+            except Exception:  # noqa: BLE001 - the metric under test
+                stats["unhandled_exceptions"] += 1
+            obs_lat.append((time.perf_counter() - t0) * 1e3)
+            stats["observes_total"] += 1
+            for _ in range(int(rng.poisson(2.0))):
+                qn = rng.integers(0, n_nodes, Q_BATCH).astype(np.int32)
+                t0 = time.perf_counter()
+                try:
+                    mean, var = srv.query(qn)
+                    mean, var = np.asarray(mean), np.asarray(var)
+                    ok = np.isfinite(mean) & np.isfinite(var) & (var >= 0)
+                    stats["queries_answered"] += int(ok.sum())
+                except Exception:  # noqa: BLE001
+                    stats["unhandled_exceptions"] += 1
+                q_lat.append((time.perf_counter() - t0) * 1e3)
+                stats["queries_total"] += Q_BATCH
+    srv.close()
+    return srv, obs_lat, q_lat, stats
+
+
+def run(fast: bool = True):
+    n = 10_000 if fast else 100_000
+    n_ticks = 48 if fast else 160
+    cfg = walks.WalkConfig(n_walkers=4, p_halt=0.25, l_max=4)
+    graph = generators.ring(n, k=3)
+    mod = modulation.diffusion(l_max=cfg.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    empty = serving.init_state(
+        graph, jax.random.PRNGKey(0), f, 0.05, CAPACITY, cfg
+    )
+    obs.enable()
+    obs.REGISTRY.reset()
+    faults.reset_faults()
+
+    rows, results = [], {}
+
+    # --- baseline vs faulted Poisson traffic ------------------------------
+    _, obs_lat0, q_lat0, base_stats = _drive_traffic(
+        empty, None, np.random.default_rng(0), n_ticks, n
+    )
+    plan = faults.parse_faults(FAULT_SPEC)
+    _, obs_lat1, q_lat1, fault_stats = _drive_traffic(
+        empty, plan, np.random.default_rng(0), n_ticks, n
+    )
+    jax.effects_barrier()
+    snap = obs.REGISTRY.snapshot()
+    counters = snap["counters"]
+
+    availability = {}
+    for mode, stats in (("baseline", base_stats), ("faulted", fault_stats)):
+        frac = (stats["queries_answered"] / stats["queries_total"]
+                if stats["queries_total"] else 0.0)
+        availability[mode] = round(frac, 6)
+        availability[f"{mode}_queries_total"] = stats["queries_total"]
+        availability[f"{mode}_queries_answered"] = stats["queries_answered"]
+    for mode, ol, ql in (("baseline", obs_lat0, q_lat0),
+                         ("faulted", obs_lat1, q_lat1)):
+        results[f"observe_p50/{mode}"] = _pctl(ol, 50)
+        results[f"observe_p99/{mode}"] = _pctl(ol, 99)
+        results[f"query_p50/{mode}"] = _pctl(ql, 50)
+        results[f"query_p99/{mode}"] = _pctl(ql, 99)
+        rows.append(dict(
+            name=f"resilience_traffic_{mode}", N=n,
+            us_per_call=f"{_pctl(ql, 50) * 1e3:.0f}",
+            availability=availability[mode],
+            query_p99_ms=round(_pctl(ql, 99), 3),
+            observe_p99_ms=round(_pctl(ol, 99), 3),
+        ))
+
+    # --- forced-stall escalation (every stall must resolve) ----------------
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((48, 48)).astype(np.float32)
+    h = jnp.asarray(a @ a.T + 48 * np.eye(48, dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal(48), jnp.float32)
+    t0 = time.perf_counter()
+    with faults.use_faults("cg_stall:1"):
+        res = solvers.solve(
+            h.__matmul__, b, solvers.SolveStrategy(), escalate=True
+        )
+        jax.block_until_ready(res.x)
+        st_obs = serving.observe_batch(
+            empty, np.arange(16, dtype=np.int32),
+            rng.standard_normal(16).astype(np.float32),
+        )
+        st_esc, _, alpha_conv = serving.refit_alpha(
+            st_obs, escalate=True, return_diagnostics=True
+        )
+        jax.block_until_ready(st_esc.alpha)
+    ms_escalate = (time.perf_counter() - t0) * 1e3
+    escalation_resolved = bool(jnp.all(res.converged)) and bool(alpha_conv)
+    results["escalate_stalled_solves"] = ms_escalate
+    rows.append(dict(name="resilience_escalation",
+                     us_per_call=f"{ms_escalate * 1e3:.0f}",
+                     resolved=escalation_resolved))
+
+    # --- crash recovery: journal + checkpoint, rebuild, compare ------------
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        jpath = os.path.join(tmp, "journal.jsonl")
+        cdir = os.path.join(tmp, "ckpt")
+        srv, _, _, _ = _drive_traffic(
+            empty, None, np.random.default_rng(3), max(n_ticks // 2, 16), n,
+            journal=jpath, checkpoint_dir=cdir,
+        )
+        probe = np.arange(min(128, n), dtype=np.int32)
+        m_live, v_live = serving.posterior_moments(srv.state, probe)
+        n_events = len(read_journal(jpath))
+        t0 = time.perf_counter()
+        recovered, n_replayed = recover(empty, jpath, cdir)
+        m_rec, v_rec = serving.posterior_moments(recovered, probe)
+        jax.block_until_ready((m_rec, v_rec))
+        ms_recover = (time.perf_counter() - t0) * 1e3
+        moment_diff = float(max(
+            jnp.max(jnp.abs(m_rec - m_live)), jnp.max(jnp.abs(v_rec - v_live))
+        ))
+    results["recovery_replay"] = ms_recover
+    rows.append(dict(name="resilience_recovery",
+                     us_per_call=f"{ms_recover * 1e3:.0f}",
+                     journal_events=n_events, replayed=n_replayed,
+                     max_moment_diff=f"{moment_diff:.2e}"))
+
+    jax.effects_barrier()
+    snap = obs.REGISTRY.snapshot()
+    counters = snap["counters"]
+    resilience = {
+        "escalation_resolved": escalation_resolved,
+        "escalation_attempts": int(
+            counters.get("solver.escalation.attempts", 0)
+        ),
+        "forced_stalls": int(
+            counters.get("solver.escalation.forced_stalls", 0)
+        ),
+        "refit_fallbacks": int(counters.get("serving.refit.fallback", 0)),
+        "rejected_appends": int(
+            fault_stats.get("rejected", 0)
+            or counters.get("serving.observe.rejected", 0)
+        ),
+        "evictions": int(counters.get("serving.observe.evictions", 0)),
+        "sanitized_queries": int(counters.get("serving.query.sanitized", 0)),
+        "recovery_max_moment_diff": moment_diff,
+        "recovery_tolerance": RECOVERY_TOL,
+        "journal_events": n_events,
+        "journal_replayed": n_replayed,
+        "unhandled_exceptions": (
+            base_stats["unhandled_exceptions"]
+            + fault_stats["unhandled_exceptions"]
+        ),
+    }
+    rows.append(dict(name="resilience_ledger", **{
+        k: v for k, v in resilience.items() if k != "recovery_tolerance"
+    }))
+
+    artifact = {
+        "provenance": provenance(fast),
+        "host_backend": jax.default_backend(),
+        "unit": "ms_per_call",
+        "n_nodes": n,
+        "capacity": CAPACITY,
+        "q_batch": Q_BATCH,
+        "fault_spec": FAULT_SPEC,
+        "availability": availability,
+        "resilience": resilience,
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    rows.append(dict(name="resilience_artifact",
+                     path=os.path.abspath(OUT_PATH)))
+    return rows
+
+
+if __name__ == "__main__":
+    bench_main(run)

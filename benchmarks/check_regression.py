@@ -28,7 +28,13 @@ Two modes, matching the two CI steps (DESIGN.md §3.6):
     within-run ``headline`` ratio must stay below 1.0 (some
     variance-reduced scheme beats iid MSE at equal walkers at the headline
     grid point), and the ``walker_efficiency`` ratio must stay at or below
-    1.0 (some scheme at half the walkers matches full-walker iid).  Exit 1
+    1.0 (some scheme at half the walkers matches full-walker iid).
+    Artifacts carrying an ``availability`` table (BENCH_resilience.json,
+    ISSUE 9) get the chaos gate: answered-query fraction ≥
+    --availability-threshold (default 0.99) with and without injected
+    faults, every forced CG stall resolved by the escalation ladder,
+    crash recovery within its recorded moment tolerance, and zero
+    unhandled exceptions.  Exit 1
     on any violation; missing expected keys are reported by name, never as
     a traceback.
   * ``--mode timing`` (informational, the CI step wraps it in
@@ -128,6 +134,64 @@ def check_estimator_quality(
     return errors
 
 
+def check_resilience(
+    baseline: dict, fresh: dict, label: str, availability_threshold: float,
+) -> list[str]:
+    """Blocking gate for artifacts with an ``availability`` table
+    (BENCH_resilience.json, ISSUE 9): chaos traffic must stay available.
+
+      * answered-query fraction ≥ --availability-threshold (default 0.99)
+        in *both* modes — the faulted run is the headline, but a baseline
+        dip means the guards themselves broke serving;
+      * every forced CG stall resolved through the escalation ladder;
+      * crash recovery reproduced the pre-crash posterior moments within
+        the artifact's own recorded tolerance (1e-5);
+      * zero unhandled exceptions — degradation is flags and fallbacks,
+        never a raise.
+    """
+    errors: list[str] = []
+    avail = fresh["availability"]
+    for mode in ("baseline", "faulted"):
+        frac = _expect(avail, mode, label, "availability", errors)
+        if frac is None:
+            continue
+        if not (isinstance(frac, (int, float)) and
+                frac >= availability_threshold):
+            errors.append(
+                f"{label}: {mode} availability {frac!r} below "
+                f"{availability_threshold} "
+                f"({avail.get(f'{mode}_queries_answered', '?')}/"
+                f"{avail.get(f'{mode}_queries_total', '?')} answered)"
+            )
+    res = fresh.get("resilience", {})
+    resolved = _expect(res, "escalation_resolved", label, "resilience",
+                       errors)
+    if resolved is not None and not resolved:
+        errors.append(
+            f"{label}: forced CG stalls were not resolved by the "
+            f"escalation ladder ({res.get('forced_stalls', '?')} stalls, "
+            f"{res.get('escalation_attempts', '?')} attempts)"
+        )
+    diff = _expect(res, "recovery_max_moment_diff", label, "resilience",
+                   errors)
+    tol = res.get("recovery_tolerance", 1e-5)
+    if diff is not None and not (
+        isinstance(diff, (int, float)) and math.isfinite(diff) and diff <= tol
+    ):
+        errors.append(
+            f"{label}: crash recovery moment mismatch {diff!r} "
+            f"(tolerance {tol})"
+        )
+    unhandled = _expect(res, "unhandled_exceptions", label, "resilience",
+                        errors)
+    if unhandled:
+        errors.append(
+            f"{label}: {unhandled} unhandled exception(s) in chaos traffic "
+            f"(guards must degrade, never raise)"
+        )
+    return errors
+
+
 def check_correctness(
     baseline: dict,
     fresh: dict,
@@ -135,6 +199,7 @@ def check_correctness(
     iters_threshold: float = 1.5,
     bf16_threshold: float = 1.25,
     mse_threshold: float = 1.25,
+    availability_threshold: float = 0.99,
 ) -> list[str]:
     errors = []
     results = fresh.get("results")
@@ -176,6 +241,11 @@ def check_correctness(
     if fresh.get("kernel_mse") is not None:
         errors.extend(
             check_estimator_quality(baseline, fresh, label, mse_threshold)
+        )
+
+    if fresh.get("availability") is not None:
+        errors.extend(
+            check_resilience(baseline, fresh, label, availability_threshold)
         )
 
     time_ratios = fresh.get("time_ratios")
@@ -238,6 +308,7 @@ def main() -> int:
     parser.add_argument("--iters-threshold", type=float, default=1.5)
     parser.add_argument("--bf16-threshold", type=float, default=1.25)
     parser.add_argument("--mse-threshold", type=float, default=1.25)
+    parser.add_argument("--availability-threshold", type=float, default=0.99)
     args = parser.parse_args()
 
     failed = False
@@ -254,7 +325,8 @@ def main() -> int:
             errors = check_correctness(baseline, fresh, label,
                                        args.iters_threshold,
                                        args.bf16_threshold,
-                                       args.mse_threshold)
+                                       args.mse_threshold,
+                                       args.availability_threshold)
             if errors:
                 # Both sides' provenance first: a cross-machine or
                 # cross-mode trip should be readable as such at a glance.

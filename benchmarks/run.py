@@ -56,6 +56,7 @@ def main() -> None:
         bench_classification,
         bench_estimator,
         bench_regression,
+        bench_resilience,
         bench_scaling,
         bench_serving,
         bench_solvers,
@@ -70,6 +71,8 @@ def main() -> None:
         ("estimator (walk schemes / BENCH_estimator.json)", bench_estimator),
         ("serving (online engine / BENCH_serving.json)", bench_serving),
         ("solvers (Krylov strategy layer / BENCH_solvers.json)", bench_solvers),
+        ("resilience (fault-tolerant serving / BENCH_resilience.json)",
+         bench_resilience),
         ("scaling (Table 1 / Fig 2)", bench_scaling),
         ("ablation (Table 5)", bench_ablation),
         ("regression (Fig 3)", bench_regression),

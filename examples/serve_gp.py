@@ -28,6 +28,7 @@ import numpy as np
 from repro import obs, serving
 from repro.core import modulation, walks
 from repro.graphs import generators
+from repro.resilience import faults
 
 
 def main():
@@ -57,6 +58,12 @@ def main():
 
 
 def run(args):
+    plan = faults.active()
+    if plan is not None:
+        # Chaos mode (REPRO_FAULTS, resilience/faults.py): the guards must
+        # absorb every injected fault — this script's assertions are the
+        # CI chaos-smoke gate.
+        print(f"chaos mode: injected fault plan [{plan.spec()}]")
     print(f"building Barabási–Albert graph with {args.nodes} nodes ...")
     t0 = time.time()
     g = generators.barabasi_albert(args.nodes, m=3, seed=0)
@@ -123,6 +130,20 @@ def run(args):
     jax.block_until_ready(state.chol)
     print(f"  batch ingested in {t_first:.2f}s (incl. compile); "
           f"steady-state observe() {1e3*(time.time()-t0):.1f} ms")
+    assert np.isfinite(np.asarray(state.chol)).all(), \
+        "guarded appends left a non-finite Cholesky"
+    if int(state.rejected) > 0:
+        print(f"  {int(state.rejected)} poisoned append(s) rejected by the "
+              f"guards")
+
+    # Refresh the representer weights through the escalation ladder — under
+    # a cg_stall fault plan this is the solve the ladder must rescue.
+    state, alpha_iters, alpha_conv = serving.refit_alpha(
+        state, escalate=True, return_diagnostics=True
+    )
+    assert bool(alpha_conv), "escalated refit_alpha did not converge"
+    print(f"  refit_alpha converged in {int(alpha_iters)} iters "
+          f"(escalation ladder armed)")
 
     print(f"serving {args.queries} queries through batch-{args.batch} "
           f"waves ...")
@@ -136,9 +157,12 @@ def run(args):
     t0 = time.time()
     loop.run(requests)
     dt = time.time() - t0
-    assert all(r.done for r in requests)
+    assert all(r.done for r in requests), "unanswered queries"
     mean = np.concatenate([r.mean for r in requests])
     var = np.concatenate([r.var for r in requests])
+    answered = int((np.isfinite(mean) & np.isfinite(var) & (var >= 0)).sum())
+    assert answered == len(mean), \
+        f"only {answered}/{len(mean)} queries answered finitely"
     best = qnodes[int(np.argmax(mean))]
     print(f"  {args.queries} queries in {dt*1e3:.0f} ms "
           f"({args.queries/dt:.0f} queries/s)")

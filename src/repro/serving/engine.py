@@ -20,6 +20,7 @@ of drawing an N-long pathwise sample per step.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from functools import partial
 
@@ -29,6 +30,7 @@ import numpy as np
 
 from .. import obs
 from ..kernels import dispatch
+from ..resilience import faults
 from .state import ServeState, _cross_solve, _moments_impl
 
 
@@ -59,9 +61,13 @@ class GPRequest:
             self.done = True
 
 
-@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
-def _engine_step(state, slot_nodes, key, *, spmv_backend, obs_tap=False):
-    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap", "fault_plan"))
+def _engine_step(state, slot_nodes, key, *, spmv_backend, obs_tap=False,
+                 fault_plan=None):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
+            faults.fault_scope(fault_plan):
+        # var is clamped to >= 0 inside _moments_impl, so the marginal
+        # Thompson draw's sqrt can never manufacture NaN.
         mean, var = _moments_impl(state, slot_nodes)
         eps = jax.random.normal(key, mean.shape, dtype=jnp.float32)
         return mean, var, mean + jnp.sqrt(var) * eps
@@ -73,15 +79,23 @@ class GPServeLoop:
     Dead slots are padded with node 0 and answered-then-discarded — every
     wave is one call of the same compiled step (no retracing as traffic
     ebbs), mirroring the static-shape discipline of the rest of the stack.
+
+    Partially-admitted requests queue in ``pending`` (bounded by
+    ``max_pending`` requests; None = unbounded): :meth:`submit` enqueues
+    with backpressure, :meth:`drain` runs the admit/step loop so callers
+    don't hand-roll the retry dance around :meth:`admit` returning False.
     """
 
     def __init__(self, state: ServeState, batch: int,
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None,
+                 max_pending: int | None = None):
         self.state = state
         self.batch = batch
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.slots: list[tuple[GPRequest, int] | None] = [None] * batch
         self.slot_nodes = np.zeros(batch, dtype=np.int32)
+        self.max_pending = max_pending
+        self.pending: collections.deque[GPRequest] = collections.deque()
 
     # -- admission -----------------------------------------------------------
     def admit(self, req: GPRequest) -> bool:
@@ -101,6 +115,21 @@ class GPServeLoop:
             obs.inc("serving.admit.accepts")
         return True
 
+    def submit(self, req: GPRequest) -> bool:
+        """Enqueue a request for :meth:`drain` with backpressure.
+
+        Returns False — and bumps ``serving.submit.rejects`` — when the
+        bounded pending queue is full; the caller backs off (or calls
+        :meth:`drain` to make room) and resubmits.  Degradation is a
+        refusal at admission, never a dropped in-flight request."""
+        if (self.max_pending is not None
+                and len(self.pending) >= self.max_pending):
+            obs.inc("serving.submit.rejects")
+            return False
+        self.pending.append(req)
+        obs.gauge("serving.queue_depth", len(self.pending))
+        return True
+
     # -- batched query step --------------------------------------------------
     def step(self) -> int:
         """Answer every occupied slot in one jitted wave; returns #served."""
@@ -115,6 +144,7 @@ class GPServeLoop:
             mean, var, draw = _engine_step(
                 self.state, jnp.asarray(self.slot_nodes), sub,
                 spmv_backend=dispatch.get_backend(), obs_tap=obs.enabled(),
+                fault_plan=faults.active(),
             )
             mean, var, draw = (
                 np.asarray(mean), np.asarray(var), np.asarray(draw)
@@ -132,16 +162,26 @@ class GPServeLoop:
             self.slots[i] = None
         return len(live)
 
-    def run(self, requests: list[GPRequest], progress=None):
-        """Drain ``requests`` through the micro-batching loop."""
-        pending = list(requests)
-        while pending or any(s is not None for s in self.slots):
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            obs.gauge("serving.queue_depth", len(pending))
+    def drain(self, progress=None) -> int:
+        """Run the admit/step loop until the pending queue and every slot
+        are empty; returns the number of queries answered.  The retry loop
+        callers used to hand-roll around :meth:`admit` returning False."""
+        served = 0
+        while self.pending or any(s is not None for s in self.slots):
+            while self.pending and self.admit(self.pending[0]):
+                self.pending.popleft()
+            obs.gauge("serving.queue_depth", len(self.pending))
             n = self.step()
+            served += n
             if progress:
-                progress(n, len(pending))
+                progress(n, len(self.pending))
+        return served
+
+    def run(self, requests: list[GPRequest], progress=None):
+        """Enqueue ``requests`` (ignoring ``max_pending`` — an explicit
+        batch is already admitted work, not new traffic) and drain."""
+        self.pending.extend(requests)
+        self.drain(progress)
         return requests
 
 
@@ -163,16 +203,19 @@ def thompson_draw(
         out = _thompson_draw(
             state, nodes, key,
             n_samples=n_samples, spmv_backend=dispatch.get_backend(),
-            obs_tap=obs.enabled(),
+            obs_tap=obs.enabled(), fault_plan=faults.active(),
         )
         sp.block_on(out)
     return out
 
 
-@partial(jax.jit, static_argnames=("n_samples", "spmv_backend", "obs_tap"))
+@partial(jax.jit,
+         static_argnames=("n_samples", "spmv_backend", "obs_tap",
+                          "fault_plan"))
 def _thompson_draw(state, nodes, key, *, n_samples, spmv_backend,
-                   obs_tap=False):
-    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
+                   obs_tap=False, fault_plan=None):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
+            faults.fault_scope(fault_plan):
         trace_q, vals_q, mean, v = _cross_solve(state, nodes)
         k_qq = dispatch.gram_block(vals_q, trace_q.cols, vals_q, trace_q.cols)
         cov = k_qq - v.T @ v
@@ -182,6 +225,19 @@ def _thompson_draw(state, nodes, key, *, n_samples, spmv_backend,
         l_post = jnp.linalg.cholesky(
             cov + jitter * jnp.eye(cov.shape[0], dtype=cov.dtype)
         )
+        # Guarded draw: if the jittered Cholesky still fails (a cov matrix
+        # mangled past what jitter fixes), fall back to independent
+        # marginal draws — diag(sqrt(clamped var)) — instead of returning
+        # an all-NaN sample batch.  The joint structure degrades; the BO
+        # loop keeps moving.
+        ok = jnp.all(jnp.isfinite(l_post))
+        obs.tap(
+            "serving.thompson.cov_fallback",
+            (~ok).astype(jnp.int32),
+            kind="counter",
+        )
+        marginal = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diagonal(cov), 0.0)))
+        l_post = jnp.where(ok, l_post, marginal)
         eps = jax.random.normal(
             key, (cov.shape[0], n_samples), dtype=jnp.float32
         )

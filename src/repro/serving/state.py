@@ -40,6 +40,7 @@ from ..core import features
 from ..core.walks import WalkConfig, WalkTrace, walk_seed
 from ..graphs.formats import Graph
 from ..kernels import dispatch
+from ..resilience import faults
 
 
 @jax.tree_util.register_pytree_node_class
@@ -62,6 +63,19 @@ class ServeState:
       seed:  uint32 counter-RNG walk seed — the identity of Φ.  Query rows
              sampled with this seed are rows of the *same* feature matrix as
              the cached train rows (DESIGN.md §3.6).
+      overflow: int32 scalar — appends dropped because the state was at
+             capacity.  A *jit-safe health flag* (DESIGN.md §3.11): masked
+             writes cannot raise under an outer jit, so degradation is
+             reported in-band and the host wrapper turns deltas into the
+             ``serving.observe.overflow`` obs counter.
+      rejected: int32 scalar — appends refused because the payload / target
+             / Schur complement was non-finite (K̂ is PSD by construction,
+             so a non-finite append is corruption, never estimator noise).
+      needs_refit: int32 scalar — appends whose Schur complement was
+             near-zero and got jitter-clamped since the last
+             refactorisation.  Non-zero means the incremental factor is
+             running on jitter: the observe_batch wrapper answers with an
+             automatic O(m³) refit; refit/ingest reset it to 0.
       cfg:   WalkConfig (static aux).
     """
 
@@ -75,6 +89,9 @@ class ServeState:
     f: jax.Array
     sigma_n2: jax.Array
     seed: jax.Array
+    overflow: jax.Array
+    rejected: jax.Array
+    needs_refit: jax.Array
     cfg: WalkConfig
 
     @property
@@ -97,6 +114,7 @@ class ServeState:
         return (
             self.graph, self.nodes, self.y, self.count, self.trace,
             self.chol, self.alpha, self.f, self.sigma_n2, self.seed,
+            self.overflow, self.rejected, self.needs_refit,
         ), (self.cfg,)
 
     @classmethod
@@ -129,6 +147,9 @@ def init_state(
         f=jnp.asarray(f, jnp.float32),
         sigma_n2=jnp.asarray(sigma_n2, jnp.float32),
         seed=walk_seed(key),
+        overflow=jnp.asarray(0, jnp.int32),
+        rejected=jnp.asarray(0, jnp.int32),
+        needs_refit=jnp.asarray(0, jnp.int32),
         cfg=cfg,
     )
 
@@ -146,6 +167,10 @@ def query_rows(state: ServeState, query_nodes: jax.Array) -> WalkTrace:
         l_max=state.cfg.l_max, reweight=state.cfg.reweight,
         scheme=state.cfg.scheme,
     )
+    # Fault-injection site (no-op — nothing staged — without an active
+    # plan): every consumer of lazy rows, append and query alike, sees the
+    # corruption; the append path rejects it, the query path sanitises it.
+    loads = faults.corrupt_loads(loads, query_nodes)
     return WalkTrace(cols=cols, loads=loads, lens=lens)
 
 
@@ -166,13 +191,15 @@ def posterior_moments(state: ServeState, query_nodes: jax.Array):
     O(q·m²) with nothing N-scale.  Returns (mean[q], var[q])."""
     return _posterior_moments(
         state, query_nodes, spmv_backend=dispatch.get_backend(),
-        obs_tap=obs.enabled(),
+        obs_tap=obs.enabled(), fault_plan=faults.active(),
     )
 
 
-@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
-def _posterior_moments(state, query_nodes, *, spmv_backend, obs_tap=False):
-    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap", "fault_plan"))
+def _posterior_moments(state, query_nodes, *, spmv_backend, obs_tap=False,
+                       fault_plan=None):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
+            faults.fault_scope(fault_plan):
         return _moments_impl(state, query_nodes)
 
 
@@ -182,7 +209,10 @@ def _cross_solve(state: ServeState, query_nodes: jax.Array):
     Returns (trace_q, vals_q, mean[q], v) with v = L⁻¹ K̂_{x,q} [c, q] —
     everything both the marginal moments and the joint Thompson draw need.
     """
-    trace_q = query_rows(state, query_nodes)
+    # guard_trace zeroes non-finite payload rows (only staged under an
+    # active fault plan): a poisoned query degrades to the prior for that
+    # node instead of NaN-ing the whole wave.
+    trace_q = faults.guard_trace(query_rows(state, query_nodes))
     vals_q = features.feature_values(trace_q, state.f)
     k_qx = dispatch.gram_block(
         vals_q, trace_q.cols, state.vals(), state.trace.cols
@@ -195,5 +225,14 @@ def _cross_solve(state: ServeState, query_nodes: jax.Array):
 def _moments_impl(state: ServeState, query_nodes: jax.Array):
     trace_q, _, mean, v = _cross_solve(state, query_nodes)
     k_qq = features.khat_diag_exact(trace_q, state.f)
-    var = jnp.maximum(k_qq - jnp.sum(v * v, axis=0), 1e-10)
-    return mean, var
+    var_raw = k_qq - jnp.sum(v * v, axis=0)
+    # K̂ is PSD by construction, so negative posterior variance is pure f32
+    # cancellation — clamp to zero (an exact-interpolation answer) instead
+    # of letting sqrt(var) turn it into NaN draws downstream; the tap
+    # counts clamp fires (nothing staged when obs is disabled).
+    obs.tap(
+        "serving.var_clamped",
+        jnp.sum(var_raw < 0).astype(jnp.int32),
+        kind="counter",
+    )
+    return mean, jnp.maximum(var_raw, 0.0)

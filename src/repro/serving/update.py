@@ -34,6 +34,7 @@ from .. import obs
 from ..core import features
 from ..core.walks import WalkTrace
 from ..kernels import dispatch
+from ..resilience import faults
 from .. import solvers
 from ..solvers import SolveStrategy
 from .state import ServeState, query_rows, solve_chol
@@ -42,7 +43,20 @@ from .state import ServeState, query_rows, solve_chol
 # The jitted updates return ONLY these leaves: returning the whole state
 # would make XLA copy the (unchanged, possibly 10⁶-node) graph arrays into
 # fresh output buffers on every observe() — the host reattaches them.
-_MUTABLE = ("nodes", "y", "count", "trace", "chol", "alpha")
+_MUTABLE = (
+    "nodes", "y", "count", "trace", "chol", "alpha",
+    "overflow", "rejected", "needs_refit",
+)
+
+# Overflow handling when observe_batch would exceed capacity (eager host
+# path; under an outer jit the jit-safe ``overflow`` flag is the signal).
+OVERFLOW_POLICIES = ("raise", "forget_oldest", "reject")
+
+# An append whose Schur complement is below this fraction of its prior
+# scale k_nn + σ² is running on jitter: the row is near-linearly-dependent
+# on the live block (duplicate/correlated observation or an injected
+# fault), and the O(m³) refit fallback owns it.
+_TINY_SCHUR_FRAC = 1e-5
 
 
 def _pack(state: ServeState):
@@ -54,10 +68,28 @@ def _unpack(state: ServeState, packed) -> ServeState:
 
 
 def _factorize(vals_x, cols_x, live, sigma_n2):
-    """Lower Cholesky of [K̂_xx + σ²I on live; I on dead] (block-diagonal)."""
+    """Lower Cholesky of [K̂_xx + σ²I on live; I on dead] (block-diagonal).
+
+    A jittered retry ladder backs the plain factorisation: when duplicate /
+    near-duplicate observations make the live Gram numerically singular
+    (K̂ is PSD, so exactly-dependent rows are possible), the Cholesky comes
+    back NaN and we retry with escalating diagonal jitter.  ``lax.cond``
+    runs at most one extra factorisation per rung at runtime, and the
+    common (healthy) case pays only the finiteness check — this is the
+    refit *fallback* path, never the O(m²) hot path."""
     gram = dispatch.gram_block(vals_x, cols_x, vals_x, cols_x)
     a = gram + jnp.diag(jnp.where(live > 0, sigma_n2, 1.0))
-    return jnp.linalg.cholesky(a)
+    chol = jnp.linalg.cholesky(a)
+    scale = jnp.maximum(jnp.max(jnp.diagonal(a)), 1.0)
+    for eps in (1e-6, 1e-4, 1e-2):
+        chol = jax.lax.cond(
+            jnp.all(jnp.isfinite(chol)),
+            lambda c=chol: c,
+            lambda e=eps: jnp.linalg.cholesky(
+                a + (e * scale) * jnp.diag(live)
+            ),
+        )
+    return chol
 
 
 def _refit_impl(state: ServeState) -> ServeState:
@@ -65,12 +97,29 @@ def _refit_impl(state: ServeState) -> ServeState:
         state.vals(), state.trace.cols, state.live_mask(), state.sigma_n2
     )
     return dataclasses.replace(
-        state, chol=chol, alpha=solve_chol(chol, state.y)
+        state, chol=chol, alpha=solve_chol(chol, state.y),
+        needs_refit=jnp.zeros_like(state.needs_refit),
     )
 
 
 def _append(state: ServeState, node, y_t) -> ServeState:
-    """One Cholesky row-append at position m = count (O(m²))."""
+    """One *guarded* Cholesky row-append at position m = count (O(m²)).
+
+    Three jit-safe health checks decide what the masked writes do
+    (DESIGN.md §3.11); none can raise, all report through the ServeState
+    flags:
+
+      * non-finite row (NaN/Inf payload, target, or Schur complement) —
+        the append is **rejected**: no write, ``rejected`` bumps.  K̂ is
+        PSD by construction, so non-finites are corruption, not noise.
+      * at capacity — the append is **dropped**: no write, ``overflow``
+        bumps (the host wrapper's eviction policy normally prevents this).
+      * near-zero Schur complement (duplicate / near-duplicate node, or an
+        injected chol_fail) — the row **is written** under the jitter
+        clamp so the factor stays SPD, and ``needs_refit`` bumps: the
+        incremental factor is running on jitter and the host wrapper
+        answers with an O(m³) refit.
+    """
     idx = jnp.arange(state.capacity)
     m = state.count
     trace1 = query_rows(state, jnp.atleast_1d(node))
@@ -81,27 +130,47 @@ def _append(state: ServeState, node, y_t) -> ServeState:
     k_nn = features.khat_diag_exact(trace1, state.f)[0]
     ell = solve_triangular(state.chol, k_vec, lower=True)
     d2 = k_nn + state.sigma_n2 - jnp.dot(ell, ell)
-    d = jnp.sqrt(jnp.maximum(d2, 1e-9))       # jitter guard: keep L SPD
+    d2 = faults.corrupt_schur(d2, node)       # injection site (off: no-op)
+    finite = (
+        jnp.isfinite(k_nn)
+        & jnp.all(jnp.isfinite(k_vec))
+        & jnp.isfinite(jnp.asarray(y_t, jnp.float32))
+        & jnp.isfinite(d2)
+    )
+    over = m >= state.capacity
+    tiny = d2 <= _TINY_SCHUR_FRAC * (k_nn + state.sigma_n2)
+    write = finite & ~over
+    # Jitter clamp relative to the row's own scale: an absolute floor would
+    # be meaningless off the unit-diagonal regime, and too small a pivot
+    # overflows f32 triangular solves when tiny pivots chain.
+    d = jnp.sqrt(jnp.maximum(d2, _TINY_SCHUR_FRAC * (k_nn + state.sigma_n2)))
     row = jnp.where(idx < m, ell, 0.0)
     row = jnp.where(idx == m, d, row)
-    sel = idx == m
+    sel = (idx == m) & write
+    one = jnp.asarray(1, jnp.int32)
+    zero = jnp.asarray(0, jnp.int32)
     return dataclasses.replace(
         state,
         nodes=jnp.where(sel, node, state.nodes),
         y=jnp.where(sel, y_t, state.y),
-        count=jnp.minimum(m + 1, state.capacity),
+        count=m + jnp.where(write, one, zero),
         trace=WalkTrace(
             cols=jnp.where(sel[:, None], trace1.cols[0], state.trace.cols),
             loads=jnp.where(sel[:, None], trace1.loads[0], state.trace.loads),
             lens=jnp.where(sel[:, None], trace1.lens[0], state.trace.lens),
         ),
         chol=jnp.where(sel[:, None], row[None, :], state.chol),
+        overflow=state.overflow + jnp.where(finite & over, one, zero),
+        rejected=state.rejected + jnp.where(finite, zero, one),
+        needs_refit=state.needs_refit + jnp.where(write & tiny, one, zero),
     )
 
 
-@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
-def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False):
-    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
+@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap", "fault_plan"))
+def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False,
+                   fault_plan=None):
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
+            faults.fault_scope(fault_plan):
         # Scan only over the mutable leaves — the graph arrays stay scan
         # *constants* instead of riding the loop carry (at 10⁶ nodes the
         # adjacency is far larger than the whole serving state).
@@ -109,54 +178,120 @@ def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False):
             st = dataclasses.replace(
                 state, nodes=carry[0], y=carry[1], count=carry[2],
                 trace=WalkTrace(*carry[3]), chol=carry[4],
+                overflow=carry[5], rejected=carry[6], needs_refit=carry[7],
             )
             st = _append(st, xy[0], xy[1])
             return (
                 st.nodes, st.y, st.count,
                 (st.trace.cols, st.trace.loads, st.trace.lens), st.chol,
+                st.overflow, st.rejected, st.needs_refit,
             ), None
 
         init = (
             state.nodes, state.y, state.count,
             (state.trace.cols, state.trace.loads, state.trace.lens),
             state.chol,
+            state.overflow, state.rejected, state.needs_refit,
         )
-        (nodes_b, y_b, count, tr, chol), _ = jax.lax.scan(
+        (nodes_b, y_b, count, tr, chol, ov, rej, nrf), _ = jax.lax.scan(
             step, init, (nodes, ys)
         )
+        obs.tap(
+            "serving.observe.overflow",
+            (ov - state.overflow).astype(jnp.int32),
+            kind="counter",
+        )
         return (nodes_b, y_b, count, WalkTrace(*tr), chol,
-                solve_chol(chol, y_b))
+                solve_chol(chol, y_b), ov, rej, nrf)
 
 
-def observe_batch(state: ServeState, nodes, ys) -> ServeState:
-    """Append a batch of observations by sequential Cholesky row-appends.
+def _evict_oldest(state: ServeState, room: int) -> ServeState:
+    """Make ``room`` slots by forgetting the oldest live observations —
+    O(room·m²) rank-1 downdates, no refactorisation."""
+    for _ in range(min(room, int(state.count))):
+        state = forget(state, 0)
+    return state
+
+
+def observe_batch(
+    state: ServeState,
+    nodes,
+    ys,
+    *,
+    on_overflow: str = "raise",
+    auto_refit: bool = True,
+) -> ServeState:
+    """Append a batch of observations by sequential *guarded* Cholesky
+    row-appends.
 
     α is re-solved once at the end (two O(m²) triangular solves).  Static
-    shapes cannot grow: appending past ``capacity`` raises here (when the
-    count is concrete — under an outer jit the overflow cannot be checked
-    and the excess appends are dropped by the masked writes)."""
+    shapes cannot grow, so ``on_overflow`` picks the degradation when the
+    batch would exceed capacity (checkable only when ``count`` is
+    concrete — under an outer jit every policy degrades to the jit-safe
+    masked drop, reported via ``state.overflow``):
+
+      * ``"raise"`` (default, the historical contract) — ValueError before
+        touching the state;
+      * ``"forget_oldest"`` — evict the oldest observations (rank-1
+        downdates) to make room, then append everything;
+      * ``"reject"`` — append until full, drop the excess, bump
+        ``state.overflow`` / the ``serving.observe.overflow`` counter
+        (reject-with-backpressure: the caller sees the flag and backs off).
+
+    Appends with non-finite payloads/targets are rejected row-wise
+    (``state.rejected``); near-singular appends are jitter-clamped and,
+    with ``auto_refit=True``, answered by an automatic O(m³) :func:`refit`
+    fallback (``serving.refit.fallback`` counter) so the returned factor
+    never runs on jitter."""
+    if on_overflow not in OVERFLOW_POLICIES:
+        raise ValueError(
+            f"unknown on_overflow {on_overflow!r}; valid: {OVERFLOW_POLICIES}"
+        )
     nodes = jnp.asarray(nodes, jnp.int32).reshape(-1)
     ys = jnp.asarray(ys, jnp.float32).reshape(-1)
-    if not isinstance(state.count, jax.core.Tracer):
-        if int(state.count) + nodes.shape[0] > state.capacity:
-            raise ValueError(
-                f"observing {nodes.shape[0]} more would exceed serving "
-                f"capacity {state.capacity} (count={int(state.count)}); "
-                "build the state with a larger capacity"
-            )
+    eager = not isinstance(state.count, jax.core.Tracer)
+    if eager:
+        excess = int(state.count) + nodes.shape[0] - state.capacity
+        if excess > 0:
+            if on_overflow == "raise":
+                raise ValueError(
+                    f"observing {nodes.shape[0]} more would exceed serving "
+                    f"capacity {state.capacity} (count={int(state.count)}); "
+                    "build the state with a larger capacity, or pass "
+                    "on_overflow='forget_oldest'/'reject' to degrade "
+                    "gracefully"
+                )
+            if on_overflow == "forget_oldest":
+                with obs.span("serving.evict", n=excess):
+                    state = _evict_oldest(state, excess)
+                obs.inc("serving.observe.evictions", excess)
     with obs.span("serving.observe_batch", n=int(nodes.shape[0])) as sp:
         packed = _observe_batch(
             state, nodes, ys, spmv_backend=dispatch.get_backend(),
-            obs_tap=obs.enabled(),
+            obs_tap=obs.enabled(), fault_plan=faults.active(),
         )
         sp.block_on(packed)
     obs.inc("serving.observations", int(nodes.shape[0]))
-    return _unpack(state, packed)
+    new = _unpack(state, packed)
+    if eager:
+        dropped = int(new.overflow) - int(state.overflow)
+        if dropped:
+            obs.inc("serving.observe.overflow", dropped)
+        rej = int(new.rejected) - int(state.rejected)
+        if rej:
+            obs.inc("serving.observe.rejected", rej)
+        if auto_refit and int(new.needs_refit) > 0:
+            # The incremental factor is running on jitter (near-singular
+            # append detected) — answer with the O(m³) refactorisation,
+            # which also resets the flag.
+            obs.inc("serving.refit.fallback")
+            new = refit(new)
+    return new
 
 
-def observe(state: ServeState, node, y) -> ServeState:
+def observe(state: ServeState, node, y, **kwargs) -> ServeState:
     """Append one observation: O(m²), no CG, nothing N-scale."""
-    return observe_batch(state, [node], [y])
+    return observe_batch(state, [node], [y], **kwargs)
 
 
 def _cholupdate(chol: jax.Array, x: jax.Array) -> jax.Array:
@@ -211,6 +346,9 @@ def _forget(state: ServeState, slot):
         ),
         chol,
         solve_chol(chol, y),
+        state.overflow,
+        state.rejected,
+        state.needs_refit,
     )
 
 
@@ -224,7 +362,12 @@ def forget(state: ServeState, slot) -> ServeState:
 
 @partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
 def _ingest(state, nodes, ys, count, *, spmv_backend, obs_tap=False):
-    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
+    # fault_scope(None): ingest is the from-scratch parity reference — a
+    # corrupted bulk load has no incremental guard to catch it, so the
+    # injection hooks are pinned off here (and ambient REPRO_FAULTS can
+    # never leak into this trace's cache entry).
+    with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
+            faults.fault_scope(None):
         trace = query_rows(state, nodes)
         live = jnp.arange(state.capacity) < count
         state = dataclasses.replace(
@@ -320,12 +463,31 @@ def _refit_alpha(state, *, strategy, spmv_backend, obs_tap=False):
         return sol.x, sol.iters, jnp.all(sol.converged)
 
 
+def _alpha_ladder(strategy: SolveStrategy) -> list[SolveStrategy]:
+    """The dense-Gram escalation rungs for :func:`refit_alpha` — the
+    subset of :func:`repro.solvers.escalation_ladder` that applies to an
+    m×m serving system (no trace rows, so no Nyström rung): stronger
+    preconditioning first, then iteration budget, warm-started throughout
+    (each attempt resumes from the best iterate so far)."""
+    rungs = [strategy]
+    s = strategy
+    if s.preconditioner == "none":
+        s = s.with_(preconditioner="jacobi", warm_start=True)
+        rungs.append(s)
+    for _ in range(2):
+        s = s.with_(max_iters=s.max_iters * 4, warm_start=True)
+        rungs.append(s)
+    return rungs
+
+
 def refit_alpha(
     state: ServeState,
     f=None,
     sigma_n2=None,
     strategy: SolveStrategy | None = None,
     return_diagnostics: bool = False,
+    escalate: bool = False,
+    max_attempts: int = 3,
 ) -> ServeState:
     """Refresh the representer weights α after a hyperparameter move —
     **without** the O(m³) Cholesky refactorisation.
@@ -339,7 +501,13 @@ def refit_alpha(
     The cached Cholesky still factorises the *old* A, so variance queries
     (``posterior_moments``' second moment, ``thompson_draw``) need a full
     :func:`refit` — use this when the serving tier answers means
-    (``alpha``-only reads) between scheduled refactorisations."""
+    (``alpha``-only reads) between scheduled refactorisations.
+
+    With ``escalate=True`` a non-converged solve retries up to
+    ``max_attempts`` times along :func:`_alpha_ladder` (stronger
+    preconditioner, then 4× iteration budgets, warm-started from the best
+    iterate), emitting ``solver.escalation`` obs events per attempt — the
+    serving-side twin of ``solvers.solve(..., escalate=True)``."""
     if strategy is None:
         strategy = solvers.SERVING_DEFAULT
     if strategy.preconditioner == "auto":
@@ -361,11 +529,36 @@ def refit_alpha(
         updates["sigma_n2"] = jnp.asarray(sigma_n2, jnp.float32)
     if updates:
         state = dataclasses.replace(state, **updates)
+    rungs = _alpha_ladder(strategy) if escalate else [strategy]
+    rungs = rungs[:max_attempts] if escalate else rungs
     with obs.span("serving.refit_alpha") as sp:
-        alpha, iters, converged = _refit_alpha(
-            state, strategy=strategy, spmv_backend=dispatch.get_backend(),
-            obs_tap=obs.enabled(),
-        )
+        for attempt, s in enumerate(rungs):
+            st = state if attempt == 0 else dataclasses.replace(
+                state, alpha=alpha
+            )
+            alpha, iters, converged = _refit_alpha(
+                st, strategy=s, spmv_backend=dispatch.get_backend(),
+                obs_tap=obs.enabled(),
+            )
+            if not escalate:
+                break
+            stalled = faults.should_stall(attempt)
+            ok = bool(converged) and not stalled
+            obs.emit_event({
+                "type": "solver.escalation", "site": "serving.refit_alpha",
+                "attempt": attempt, "converged": ok,
+                "forced_stall": stalled, "max_iters": s.max_iters,
+                "preconditioner": s.preconditioner,
+            })
+            obs.inc("solver.escalation.attempts")
+            if stalled:
+                obs.inc("solver.escalation.forced_stalls")
+            if ok:
+                if attempt > 0:
+                    obs.inc("solver.escalation.resolved")
+                break
+        else:
+            obs.inc("solver.escalation.exhausted")
         sp.block_on(alpha)
     state = dataclasses.replace(state, alpha=alpha)
     if return_diagnostics:

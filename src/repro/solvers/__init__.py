@@ -15,6 +15,10 @@ from .cg import (  # noqa: F401
     make_preconditioner,
     solve,
 )
+from .escalate import (  # noqa: F401
+    escalation_ladder,
+    solve_escalate,
+)
 from .nystrom import (  # noqa: F401
     nystrom_precond,
     pivot_rows,

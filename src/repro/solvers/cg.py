@@ -304,6 +304,8 @@ def solve(
     dot: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
     precond: Callable[[jax.Array], jax.Array] | None = None,
     unroll: bool = False,
+    escalate: bool = False,
+    max_attempts: int = 4,
 ) -> CGResult:
     """Solve H v = b under a :class:`SolveStrategy` — the one entry point.
 
@@ -319,7 +321,20 @@ def solve(
     measured rank).  The preconditioner is always built from the *original*
     f32 operator; ``strategy.matvec_dtype`` then wraps only the CG matvec,
     and the rank actually used is reported as ``CGResult.precond_rank``.
+
+    ``escalate=True`` turns a non-converged result into host-level retries
+    along :func:`repro.solvers.escalation_ladder` (capped at
+    ``max_attempts``, jittered backoff, ``solver.escalation`` obs events) —
+    see solvers/escalate.py.  Under an active trace escalation degrades to
+    this plain solve, so the flag is always safe to pass.
     """
+    if escalate:
+        from .escalate import solve_escalate
+
+        return solve_escalate(
+            h, b, strategy, x0=x0, dot=dot, precond=precond,
+            unroll=unroll, max_attempts=max_attempts,
+        )
     if strategy.preconditioner == "auto":
         from .nystrom import resolve_strategy
 

@@ -1,0 +1,636 @@
+"""Fault-tolerant serving (DESIGN.md §3.11): fault injection, guarded
+appends, overflow policies, solve escalation, WAL + crash recovery.
+
+Contract under test (ISSUE 9 acceptance):
+  * fault resolution mirrors the spmv/obs pattern (context > global >
+    ``REPRO_FAULTS`` env > off) and injection is deterministic per node;
+  * guards disabled ⇒ the compiled HLO of serving waves/appends is
+    *unchanged* (fault_plan=None trace is identical under any ambient
+    plan — the obs zero-overhead contract);
+  * guarded appends reject non-finite rows, flag overflow jit-safely, and
+    answer near-singular appends with the automatic refit fallback — a
+    ServeState Cholesky is never left non-finite (property-tested over
+    duplicate/near-duplicate streams);
+  * the escalation ladder resolves forced CG stalls within capped
+    attempts, emitting ``solver.escalation`` events;
+  * recover(checkpoint, journal) reproduces pre-crash posterior moments
+    to 1e-5, including after a hard mid-stream ``os._exit`` kill.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, serving, solvers
+from repro.core import modulation, walks
+from repro.graphs import generators
+from repro.resilience import faults
+from repro.resilience.journal import Journal, read_journal, recover, replay
+from repro.resilience.server import ResilientServer
+from repro.serving import state as serving_state
+from repro.serving import update as serving_update
+
+CFG = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+S2 = 0.05
+CAPACITY = 16
+
+
+@pytest.fixture(autouse=True)
+def clean_faults(monkeypatch):
+    """Every test starts fault-free: no env plan, no global, fresh kill
+    counter — and a clean obs registry for the counter assertions."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    faults.reset_faults()
+    obs.reset_enabled()
+    obs.REGISTRY.reset()
+    yield
+    faults.reset_faults()
+    obs.reset_enabled()
+    obs.REGISTRY.reset()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = generators.grid2d(10, 10)
+    mod = modulation.diffusion(l_max=CFG.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    empty = serving.init_state(
+        g, jax.random.PRNGKey(0), f, S2, capacity=CAPACITY, cfg=CFG
+    )
+    return g, f, empty
+
+
+def _finite_state(st) -> bool:
+    return bool(
+        jnp.all(jnp.isfinite(st.chol))
+        and jnp.all(jnp.isfinite(st.alpha))
+        and jnp.all(jnp.isfinite(st.trace.loads))
+    )
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: parsing + resolution (the spmv/obs pattern).
+# ---------------------------------------------------------------------------
+
+
+def test_parse_faults_roundtrip():
+    p = faults.parse_faults("nan_payload:0.01,cg_stall:1,kill_at:5,seed:7")
+    assert p == faults.FaultPlan(
+        nan_payload=0.01, cg_stall=1, kill_at=5, seed=7
+    )
+    assert hash(p) is not None                   # static-arg requirement
+    assert faults.parse_faults("") is None
+    assert faults.parse_faults("off") is None
+    assert faults.parse_faults(p.spec()) == p
+
+
+def test_parse_faults_rejects_unknown_and_invalid():
+    with pytest.raises(ValueError, match="unknown fault"):
+        faults.parse_faults("nan_paylaod:0.1")
+    with pytest.raises(ValueError, match="name:value"):
+        faults.parse_faults("nan_payload")
+    with pytest.raises(ValueError, match="probability"):
+        faults.FaultPlan(nan_payload=1.5)
+
+
+def test_fault_resolution_order(monkeypatch):
+    assert faults.active() is None                       # default: off
+    monkeypatch.setenv("REPRO_FAULTS", "cg_stall:2")
+    assert faults.active().cg_stall == 2                 # env
+    faults.set_faults("cg_stall:3")
+    assert faults.active().cg_stall == 3                 # global beats env
+    with faults.use_faults("cg_stall:4"):
+        assert faults.active().cg_stall == 4             # context beats global
+        with faults.use_faults(None):
+            assert faults.active() is None               # explicit off pin
+    assert faults.active().cg_stall == 3
+    faults.set_faults(None)
+    assert faults.active() is None                       # global off beats env
+
+
+def test_corruption_is_deterministic_per_node(setup):
+    """Same nodes, same plan ⇒ byte-identical corruption (the counter-RNG
+    discipline: chaos runs are replayable)."""
+    _, _, empty = setup
+    nodes = np.arange(20, dtype=np.int32)
+    with faults.use_faults("nan_payload:0.3"):
+        t1 = serving_state.query_rows(empty, jnp.asarray(nodes))
+        t2 = serving_state.query_rows(empty, jnp.asarray(nodes))
+    np.testing.assert_array_equal(np.asarray(t1.loads), np.asarray(t2.loads))
+    bad = ~np.isfinite(np.asarray(t1.loads)).all(axis=1)
+    assert 0 < bad.sum() < len(nodes)            # some, not all, corrupted
+    with faults.use_faults("nan_payload:0.3,seed:9"):
+        t3 = serving_state.query_rows(empty, jnp.asarray(nodes))
+    bad3 = ~np.isfinite(np.asarray(t3.loads)).all(axis=1)
+    assert not np.array_equal(bad, bad3)         # seed moves the fault set
+
+
+# ---------------------------------------------------------------------------
+# Zero-overhead contract: fault_plan=None HLO is pinned and fault-free.
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_faults_leave_hlo_unchanged(setup):
+    """Mirrors test_obs's callback-less-HLO check: the fault_plan=None
+    trace is byte-identical no matter what ambient plan is active (the
+    fault_scope pin works), and an active plan produces a different
+    program."""
+    _, _, empty = setup
+    q = np.arange(8, dtype=np.int32)
+    plan = faults.parse_faults("nan_payload:0.1,chol_fail:0.1")
+
+    off = serving_state._posterior_moments.lower(
+        empty, q, spmv_backend="xla", obs_tap=False, fault_plan=None
+    ).as_text()
+    with faults.use_faults("nan_payload:0.5,chol_fail:0.5"):
+        off_pinned = serving_state._posterior_moments.lower(
+            empty, q, spmv_backend="xla", obs_tap=False, fault_plan=None
+        ).as_text()
+    on = serving_state._posterior_moments.lower(
+        empty, q, spmv_backend="xla", obs_tap=False, fault_plan=plan
+    ).as_text()
+    assert off == off_pinned
+    assert on != off
+    assert "callback" not in off                 # still obs-clean too
+
+    nodes = np.arange(4, dtype=np.int32)
+    ys = np.zeros(4, np.float32)
+    off_b = serving_update._observe_batch.lower(
+        empty, nodes, ys, spmv_backend="xla", obs_tap=False, fault_plan=None
+    ).as_text()
+    with faults.use_faults("chol_fail:0.5"):
+        off_b_pinned = serving_update._observe_batch.lower(
+            empty, nodes, ys, spmv_backend="xla", obs_tap=False,
+            fault_plan=None,
+        ).as_text()
+    on_b = serving_update._observe_batch.lower(
+        empty, nodes, ys, spmv_backend="xla", obs_tap=False, fault_plan=plan
+    ).as_text()
+    assert off_b == off_b_pinned
+    assert on_b != off_b
+    assert "callback" not in off_b
+
+
+# ---------------------------------------------------------------------------
+# Guarded appends.
+# ---------------------------------------------------------------------------
+
+
+def test_nan_payload_appends_rejected_not_absorbed(setup):
+    """Poisoned observes are refused row-wise: count only advances for
+    healthy rows, the rejected flag reports the rest, and the factor stays
+    finite."""
+    _, _, empty = setup
+    nodes = np.arange(12, dtype=np.int32)
+    ys = np.ones(12, np.float32)
+    with faults.use_faults("nan_payload:0.4"):
+        st = serving.observe_batch(empty, nodes, ys)
+    assert int(st.rejected) > 0
+    assert int(st.count) == len(nodes) - int(st.rejected)
+    assert _finite_state(st)
+    # clean appends still work on the survivor state
+    st2 = serving.observe_batch(st, [90], [0.5])
+    assert int(st2.count) == int(st.count) + 1 and _finite_state(st2)
+
+
+def test_nonfinite_target_rejected(setup):
+    _, _, empty = setup
+    st = serving.observe_batch(empty, [1, 2, 3], [0.1, np.nan, 0.3])
+    assert int(st.rejected) == 1
+    assert int(st.count) == 2
+    assert _finite_state(st)
+
+
+def test_chol_fail_triggers_refit_fallback(setup):
+    """An injected near-zero Schur complement flags needs_refit; the host
+    wrapper answers with the O(m³) refit (which clears the flag and leaves
+    a healthy factor matching the from-scratch reference)."""
+    _, _, empty = setup
+    nodes = np.asarray([3, 4, 5], np.int32)
+    ys = np.asarray([0.1, 0.2, 0.3], np.float32)
+    with faults.use_faults("chol_fail:1.0"):
+        st = serving.observe_batch(empty, nodes, ys)
+    assert int(st.needs_refit) == 0              # refit fallback cleared it
+    assert _finite_state(st)
+    ref = serving.ingest(empty, nodes, ys)
+    np.testing.assert_allclose(
+        np.asarray(st.chol), np.asarray(ref.chol), rtol=1e-5, atol=1e-6
+    )
+    # opting out of the fallback leaves the flag set for the caller; the
+    # jitter clamp keeps the *factor* SPD and finite (alpha may be
+    # degraded — that's what the flag reports)
+    with faults.use_faults("chol_fail:1.0"):
+        st_raw = serving.observe_batch(empty, nodes, ys, auto_refit=False)
+    assert int(st_raw.needs_refit) == len(nodes)
+    assert bool(jnp.all(jnp.isfinite(st_raw.chol)))
+    assert bool(jnp.all(jnp.diagonal(st_raw.chol) > 0))
+
+
+def test_overflow_policies(setup):
+    _, _, empty = setup
+    full = serving.observe_batch(
+        empty, np.arange(CAPACITY, dtype=np.int32),
+        np.zeros(CAPACITY, np.float32),
+    )
+    # raise (the historical default contract)
+    with pytest.raises(ValueError, match="capacity"):
+        serving.observe_batch(full, [50], [1.0])
+    # forget_oldest: evict to make room; newest data wins
+    st = serving.observe_batch(
+        full, [50, 51], [1.0, 2.0], on_overflow="forget_oldest"
+    )
+    assert int(st.count) == CAPACITY
+    assert int(st.overflow) == 0
+    live = np.asarray(st.nodes)[: int(st.count)]
+    assert 50 in live and 51 in live and 0 not in live and 1 not in live
+    assert _finite_state(st)
+    # eviction parity: forget-then-append == the same stream refactorised
+    ref = serving.ingest(
+        empty,
+        np.concatenate([np.arange(2, CAPACITY), [50, 51]]).astype(np.int32),
+        np.concatenate([np.zeros(CAPACITY - 2), [1.0, 2.0]]).astype(
+            np.float32
+        ),
+    )
+    np.testing.assert_allclose(
+        np.asarray(st.chol), np.asarray(ref.chol), rtol=1e-4, atol=1e-4
+    )
+    # reject: drop the excess, flag it
+    st_r = serving.observe_batch(full, [50], [1.0], on_overflow="reject")
+    assert int(st_r.count) == CAPACITY
+    assert int(st_r.overflow) == 1
+    with pytest.raises(ValueError, match="on_overflow"):
+        serving.observe_batch(full, [50], [1.0], on_overflow="evict")
+
+
+def test_overflow_flag_is_jit_safe(setup):
+    """Under an outer jit the eager policies can't run — the masked drop
+    must still *report* through the overflow flag instead of silently
+    discarding (the ISSUE 9 silent-drop fix)."""
+    _, _, empty = setup
+    full = serving.observe_batch(
+        empty, np.arange(CAPACITY, dtype=np.int32),
+        np.zeros(CAPACITY, np.float32),
+    )
+
+    @jax.jit
+    def outer(st, nodes, ys):
+        packed = serving_update._observe_batch(
+            st, nodes, ys, spmv_backend="xla"
+        )
+        return serving_update._unpack(st, packed)
+
+    st = outer(full, jnp.asarray([50], jnp.int32),
+               jnp.asarray([1.0], jnp.float32))
+    assert int(st.overflow) == 1
+    assert int(st.count) == CAPACITY
+    assert _finite_state(st)
+
+
+def test_var_clamp_counter_and_nonnegative_variance(setup):
+    """Posterior variances are clamped at exactly zero (not the old 1e-10
+    floor) and the clamp has an obs counter wired."""
+    _, f, empty = setup
+    st = serving.observe_batch(
+        empty, np.arange(10, dtype=np.int32),
+        np.random.default_rng(0).standard_normal(10).astype(np.float32),
+    )
+    obs.enable()
+    _, var = serving.posterior_moments(st, np.arange(30, dtype=np.int32))
+    jax.effects_barrier()
+    assert bool(jnp.all(var >= 0.0))
+    # counter exists (possibly 0 fires on this healthy state)
+    snap = obs.REGISTRY.snapshot()
+    assert "serving.var_clamped" in snap["counters"]
+
+
+def test_thompson_draw_fallback_stays_finite(setup):
+    """Even with a mangled covariance the joint draw degrades to marginal
+    draws instead of NaN."""
+    _, _, empty = setup
+    st = serving.observe_batch(
+        empty, np.arange(8, dtype=np.int32), np.zeros(8, np.float32)
+    )
+    out = serving.thompson_draw(
+        st, np.arange(6, dtype=np.int32), jax.random.PRNGKey(3), n_samples=4
+    )
+    assert out.shape == (6, 4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# Escalation ladder.
+# ---------------------------------------------------------------------------
+
+
+def test_escalation_ladder_order():
+    base = solvers.SolveStrategy(preconditioner="none", max_iters=32,
+                                 matvec_dtype="bfloat16")
+    rungs = solvers.escalation_ladder(base)
+    assert rungs[0] == base
+    assert rungs[1].preconditioner == "jacobi" and rungs[1].warm_start
+    assert rungs[2].max_iters == 32 * 4
+    assert rungs[-1].matvec_dtype == "float32"
+    # jacobi base skips the jacobi rung
+    rungs2 = solvers.escalation_ladder(solvers.SolveStrategy())
+    assert rungs2[0].preconditioner == "jacobi"
+    assert rungs2[1].max_iters == rungs2[0].max_iters * 4
+
+
+def _spd_system(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    h = jnp.asarray(a @ a.T + n * np.eye(n, dtype=np.float32))
+    return h.__matmul__, jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+def test_escalation_resolves_forced_stall():
+    """cg_stall:k forces the first k attempts non-converged; the ladder
+    must resolve within the cap and say so in the obs counters."""
+    matvec, b = _spd_system()
+    obs.enable()
+    with faults.use_faults("cg_stall:2"):
+        res = solvers.solve(
+            matvec, b, solvers.SolveStrategy(preconditioner="none"),
+            escalate=True,
+        )
+    assert bool(jnp.all(res.converged))
+    snap = obs.REGISTRY.snapshot()
+    assert snap["counters"]["solver.escalation.forced_stalls"] == 2
+    assert snap["counters"]["solver.escalation.attempts"] == 3
+    assert snap["counters"]["solver.escalation.resolved"] == 1
+
+
+def test_escalation_exhaustion_reports_honestly():
+    """A stall deeper than the attempt cap exhausts the ladder: the result
+    keeps converged=False (never a lie) and the exhausted counter fires."""
+    matvec, b = _spd_system()
+    obs.enable()
+    with faults.use_faults("cg_stall:99"):
+        res = solvers.solve(
+            matvec, b, solvers.SolveStrategy(), escalate=True,
+            max_attempts=2,
+        )
+    assert not bool(jnp.all(res.converged))
+    assert obs.REGISTRY.snapshot()["counters"][
+        "solver.escalation.exhausted"
+    ] == 1
+
+
+def test_escalate_inside_jit_degrades_to_plain_solve():
+    matvec, b = _spd_system()
+
+    @jax.jit
+    def solve_in_jit(b):
+        return solvers.solve(
+            matvec, b, solvers.SolveStrategy(), escalate=True
+        ).x
+
+    x = solve_in_jit(b)
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_refit_alpha_escalates_through_stall(setup):
+    _, _, empty = setup
+    st = serving.observe_batch(
+        empty, np.arange(10, dtype=np.int32),
+        np.random.default_rng(1).standard_normal(10).astype(np.float32),
+    )
+    with faults.use_faults("cg_stall:1"):
+        st2, _, converged = serving.refit_alpha(
+            st, escalate=True, return_diagnostics=True
+        )
+    assert bool(converged)
+    np.testing.assert_allclose(
+        np.asarray(st2.alpha), np.asarray(st.alpha), rtol=1e-3, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine queue: submit / drain with backpressure.
+# ---------------------------------------------------------------------------
+
+
+def test_serve_loop_submit_drain_backpressure(setup):
+    _, _, empty = setup
+    st = serving.observe_batch(
+        empty, np.arange(8, dtype=np.int32), np.zeros(8, np.float32)
+    )
+    loop = serving.GPServeLoop(st, batch=4, max_pending=2)
+    reqs = [serving.GPRequest(nodes=np.arange(i, i + 3)) for i in range(4)]
+    assert loop.submit(reqs[0]) and loop.submit(reqs[1])
+    assert not loop.submit(reqs[2])              # bounded queue: refuse
+    served = loop.drain()
+    assert served == 6 and reqs[0].done and reqs[1].done
+    assert loop.submit(reqs[2])                  # drained: room again
+    loop.drain()
+    assert reqs[2].done
+    # run() still drains explicit batches regardless of max_pending
+    loop.run([reqs[3]])
+    assert reqs[3].done
+
+
+# ---------------------------------------------------------------------------
+# Property test: duplicate / near-duplicate streams never break the factor.
+# ---------------------------------------------------------------------------
+
+
+def _check_duplicate_stream(stream, chol_fail, seed):
+    """Guarded append contract: any stream of duplicate/near-duplicate
+    nodes — with or without injected Schur corruption — either appends
+    cleanly or falls back to refit; the Cholesky and α are always finite
+    and the diagonal stays positive."""
+    g = generators.grid2d(6, 6)
+    mod = modulation.diffusion(l_max=3)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    cfg = walks.WalkConfig(n_walkers=4, p_halt=0.3, l_max=3)
+    st = serving.init_state(
+        g, jax.random.PRNGKey(2), f, 1e-6, capacity=CAPACITY, cfg=cfg
+    )
+    ys = np.random.default_rng(seed).standard_normal(len(stream))
+    plan = f"chol_fail:{chol_fail},seed:{seed % 97}" if chol_fail else None
+    with faults.use_faults(plan):
+        st = serving.observe_batch(
+            st, np.asarray(stream, np.int32), ys.astype(np.float32)
+        )
+    assert _finite_state(st)
+    assert bool(jnp.all(jnp.diagonal(st.chol) > 0))
+    mean, var = serving.posterior_moments(st, np.arange(10, dtype=np.int32))
+    assert bool(jnp.all(jnp.isfinite(mean))) and bool(jnp.all(var >= 0))
+
+
+def test_duplicate_streams_never_leave_nonfinite_cholesky():
+    """Deterministic edge cases of the duplicate-stream property —
+    always runs even without hypothesis (σ² = 1e-6 makes a repeated node a
+    genuinely near-singular append)."""
+    _check_duplicate_stream([3, 3, 3, 3], 0.0, seed=0)
+    _check_duplicate_stream([0, 1, 0, 1, 0, 1], 1.0, seed=1)
+    _check_duplicate_stream([5] * CAPACITY, 0.5, seed=2)
+
+
+try:
+    from hypothesis import given, settings, strategies as hst
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        stream=hst.lists(hst.integers(0, 5), min_size=2, max_size=CAPACITY),
+        chol_fail=hst.sampled_from([0.0, 0.5, 1.0]),
+        seed=hst.integers(0, 2**16),
+    )
+    def test_duplicate_streams_property(stream, chol_fail, seed):
+        _check_duplicate_stream(stream, chol_fail, seed)
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_duplicate_streams_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal + recovery.
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with Journal(path) as j:
+        assert j.log("observe", nodes=[1], ys=[0.5]) == 0
+        assert j.log("forget", slot=0) == 1
+        with pytest.raises(ValueError, match="unknown journal event"):
+            j.log("mutate")
+    with open(path, "a") as fh:
+        fh.write('{"t": 1, "seq": 2, "type": "obse')   # torn tail write
+    events = read_journal(path)
+    assert [e["seq"] for e in events] == [0, 1]        # tail dropped
+    with Journal(path) as j2:                          # seq resumes
+        assert j2.log("observe", nodes=[2], ys=[1.0]) == 2
+
+
+def test_recover_matches_live_state(setup, tmp_path):
+    _, _, empty = setup
+    jpath = str(tmp_path / "j.jsonl")
+    cdir = str(tmp_path / "ckpt")
+    rng = np.random.default_rng(0)
+    with ResilientServer(
+        empty, journal=jpath, checkpoint_dir=cdir, checkpoint_every=2
+    ) as srv:
+        srv.observe([1, 2, 3], rng.standard_normal(3))
+        srv.observe([4, 5], rng.standard_normal(2))
+        srv.forget(0)
+        srv.refit()
+        srv.observe([7], [0.7])
+        q = np.arange(12, dtype=np.int32)
+        m_live, v_live = srv.query(q)
+    st, n_replayed = recover(empty, jpath, cdir)
+    assert 0 < n_replayed < len(read_journal(jpath))   # tail, not the log
+    m_rec, v_rec = serving.posterior_moments(st, q)
+    np.testing.assert_allclose(np.asarray(m_rec), np.asarray(m_live),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_rec), np.asarray(v_live),
+                               rtol=1e-5, atol=1e-5)
+    # and the no-checkpoint path folds the whole journal to the same state
+    st_full, n_full = recover(empty, jpath, None)
+    assert n_full == len(read_journal(jpath))
+    m_f, v_f = serving.posterior_moments(st_full, q)
+    np.testing.assert_allclose(np.asarray(m_f), np.asarray(m_live),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_replay_respects_overflow_policy(setup, tmp_path):
+    """A journal recorded under eviction degrades identically on replay."""
+    _, _, empty = setup
+    jpath = str(tmp_path / "j.jsonl")
+    with ResilientServer(
+        empty, journal=jpath, on_overflow="forget_oldest"
+    ) as srv:
+        srv.observe(np.arange(CAPACITY, dtype=np.int32),
+                    np.zeros(CAPACITY, np.float32))
+        srv.observe([50, 51], [1.0, 2.0])         # evicts 0 and 1
+        live_nodes = np.asarray(srv.state.nodes)[: int(srv.state.count)]
+    st, _ = recover(empty, jpath)
+    rec_nodes = np.asarray(st.nodes)[: int(st.count)]
+    np.testing.assert_array_equal(rec_nodes, live_nodes)
+
+
+_CHILD = textwrap.dedent("""
+    import jax; jax.config.update("jax_platforms", "cpu")
+    import numpy as np
+    import repro.serving as serving
+    from repro.resilience import ResilientServer
+    from repro.core import modulation, walks
+    from repro.graphs import generators
+
+    g = generators.grid2d(10, 10)
+    cfg = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+    mod = modulation.diffusion(l_max=cfg.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    state = serving.init_state(
+        g, jax.random.PRNGKey(0), f, 0.05, capacity=32, cfg=cfg
+    )
+    srv = ResilientServer(state, journal=r"{jpath}",
+                          checkpoint_dir=r"{cdir}", checkpoint_every=3)
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        srv.observe(rng.integers(0, 100, 2), rng.standard_normal(2))
+    raise SystemExit("kill_at never fired")
+""")
+
+
+def test_kill_and_recover_chaos(tmp_path):
+    """The headline chaos test: a journalled server is killed hard
+    (os._exit — no atexit, no flushing beyond the WAL's own) mid-stream by
+    an injected kill_at fault; recovery from checkpoint + journal tail
+    must equal the full-journal fold exactly.
+
+    The write-ahead discipline means the killed op was journalled but
+    never acked — so the comparison target is the journal's state (what
+    recovery promises), not the dead process's last in-memory state."""
+    jpath = str(tmp_path / "j.jsonl")
+    cdir = str(tmp_path / "ckpt")
+    child = _CHILD.format(jpath=jpath, cdir=cdir)
+    env = dict(
+        os.environ, REPRO_FAULTS="kill_at:6",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + sys.path
+        ),
+        JAX_PLATFORMS="cpu",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", child], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert proc.returncode == faults.KILL_EXIT_CODE, proc.stderr
+    events = read_journal(jpath)
+    assert len(events) == 6                      # WAL ahead of the kill
+    assert os.path.isdir(cdir)
+
+    g = generators.grid2d(10, 10)
+    mod = modulation.diffusion(l_max=CFG.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    cfg = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+    empty = serving.init_state(
+        g, jax.random.PRNGKey(0), f, 0.05, capacity=32, cfg=cfg
+    )
+    st, n_tail = recover(empty, jpath, cdir)
+    st_full, n_full = recover(empty, jpath, None)
+    assert n_full == 6 and 0 < n_tail < 6        # checkpoint skipped a prefix
+    q = np.arange(20, dtype=np.int32)
+    m1, v1 = serving.posterior_moments(st, q)
+    m2, v2 = serving.posterior_moments(st_full, q)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-5)
+    # a recovered server keeps serving and journalling
+    srv, _ = ResilientServer.recover(empty, jpath, cdir)
+    srv.observe([42], [0.42])
+    assert int(srv.state.count) == int(st.count) + 1
+    assert json.loads(open(jpath).readlines()[-1])["seq"] == 6
+    srv.close()
