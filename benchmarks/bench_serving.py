@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._util import bench_main, provenance, timeit, timeit_result
+from benchmarks._util import bench_main, provenance, timeit_result
 from repro import serving, solvers
 from repro.core import linops, modulation, walks
 from repro.gp import mll, posterior
@@ -50,8 +50,12 @@ N_CAND = 512                  # Thompson candidate set (incremental BO step)
 CG_ITERS = 64
 
 
-def _time(fn, reps: int = 1) -> float:
-    return timeit(fn, reps) * 1e3  # ms
+def _time(fn, reps: int = 2) -> float:
+    # min-of-reps (best=True): the speedups table gates on ratios of these
+    # rows, so a one-sample mean would let one CI-runner hiccup trip (or
+    # mask) the ≥10× acceptance criterion — same discipline as
+    # bench_solvers.py.
+    return timeit_result(fn, reps, best=True)[0] * 1e3  # ms
 
 
 @partial(jax.jit, static_argnames=("cfg", "chunk", "cg_iters"))
@@ -129,7 +133,8 @@ def run(fast: bool = True):
             lambda: _refit_posterior_mean(
                 graph, obs_j, f, s2, y_j, key,
                 cfg=cfg, chunk=CHUNK, cg_iters=CG_ITERS,
-            )
+            ),
+            reps=2, best=True,
         )                                     # timed call doubles as the
         ms_refit = sec * 1e3                  # CG-diagnostics source
         table[f"refit_query/N{n}"] = ms_refit

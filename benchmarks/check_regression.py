@@ -34,7 +34,11 @@ Two modes, matching the two CI steps (DESIGN.md §3.6):
     --availability-threshold (default 0.99) with and without injected
     faults, every forced CG stall resolved by the escalation ladder,
     crash recovery within its recorded moment tolerance, and zero
-    unhandled exceptions.  Exit 1
+    unhandled exceptions.  Artifacts carrying a ``serving_load`` table
+    (BENCH_serving_load.json, ISSUE 10) get the throughput gate: at the
+    artifact's ``headline_n`` the overlapped fleet QPS ratio vs the sync
+    loop must reach --qps-threshold (default 1.5×) with a p99 query-latency
+    ratio ≤ 1.0.  Exit 1
     on any violation; missing expected keys are reported by name, never as
     a traceback.
   * ``--mode timing`` (informational, the CI step wraps it in
@@ -192,6 +196,51 @@ def check_resilience(
     return errors
 
 
+def check_serving_load(
+    baseline: dict, fresh: dict, label: str, qps_threshold: float,
+) -> list[str]:
+    """Blocking gate for artifacts with a ``serving_load`` table
+    (BENCH_serving_load.json, ISSUE 10): at the headline size (N=1e6) the
+    overlapped fleet must sustain ≥ --qps-threshold (default 1.5×) the
+    sync ``GPServeLoop`` QPS on the same replayed traffic, with p99 query
+    latency no worse — throughput bought with tail latency is not a win
+    for a serving tier.  Ratios are within-artifact (same host, same run),
+    so they gate meaningfully on shared CI runners; QPS lives in this
+    table and not in ``results`` because the timing gate treats
+    ``results`` values as costs."""
+    errors: list[str] = []
+    table = fresh["serving_load"]
+    n = fresh.get("headline_n", 1_000_000)
+    ratio = _expect(table, f"qps_ratio/N{n}", label, "serving_load", errors)
+    if ratio is not None and not (
+        isinstance(ratio, (int, float)) and ratio >= qps_threshold
+    ):
+        errors.append(
+            f"{label}: overlapped fleet sustains only {ratio!r}x the sync "
+            f"QPS at N={n} (need >= {qps_threshold}x; "
+            f"sync {table.get(f'sync_qps/N{n}', '?')} qps, "
+            f"overlap {table.get(f'overlap_qps/N{n}', '?')} qps)"
+        )
+    p99 = _expect(table, f"query_p99_ratio/N{n}", label, "serving_load",
+                  errors)
+    if p99 is not None and not (
+        isinstance(p99, (int, float)) and p99 <= 1.0
+    ):
+        errors.append(
+            f"{label}: overlapped p99 query latency is {p99!r}x sync at "
+            f"N={n} (must be <= 1.0x — throughput must not cost tail "
+            f"latency)"
+        )
+    if baseline.get("host_backend") == fresh.get("host_backend"):
+        dropped = set(baseline.get("serving_load", {})) - set(table)
+        if dropped:
+            errors.append(
+                f"{label}: serving_load rows dropped vs baseline: "
+                f"{sorted(dropped)}"
+            )
+    return errors
+
+
 def check_correctness(
     baseline: dict,
     fresh: dict,
@@ -200,6 +249,7 @@ def check_correctness(
     bf16_threshold: float = 1.25,
     mse_threshold: float = 1.25,
     availability_threshold: float = 0.99,
+    qps_threshold: float = 1.5,
 ) -> list[str]:
     errors = []
     results = fresh.get("results")
@@ -246,6 +296,11 @@ def check_correctness(
     if fresh.get("availability") is not None:
         errors.extend(
             check_resilience(baseline, fresh, label, availability_threshold)
+        )
+
+    if fresh.get("serving_load") is not None:
+        errors.extend(
+            check_serving_load(baseline, fresh, label, qps_threshold)
         )
 
     time_ratios = fresh.get("time_ratios")
@@ -309,6 +364,7 @@ def main() -> int:
     parser.add_argument("--bf16-threshold", type=float, default=1.25)
     parser.add_argument("--mse-threshold", type=float, default=1.25)
     parser.add_argument("--availability-threshold", type=float, default=0.99)
+    parser.add_argument("--qps-threshold", type=float, default=1.5)
     args = parser.parse_args()
 
     failed = False
@@ -326,7 +382,8 @@ def main() -> int:
                                        args.iters_threshold,
                                        args.bf16_threshold,
                                        args.mse_threshold,
-                                       args.availability_threshold)
+                                       args.availability_threshold,
+                                       args.qps_threshold)
             if errors:
                 # Both sides' provenance first: a cross-machine or
                 # cross-mode trip should be readable as such at a glance.

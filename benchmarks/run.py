@@ -59,6 +59,7 @@ def main() -> None:
         bench_resilience,
         bench_scaling,
         bench_serving,
+        bench_serving_load,
         bench_solvers,
         bench_spmv,
         bench_walks,
@@ -70,6 +71,8 @@ def main() -> None:
         ("walks (walk sampler / BENCH_walks.json)", bench_walks),
         ("estimator (walk schemes / BENCH_estimator.json)", bench_estimator),
         ("serving (online engine / BENCH_serving.json)", bench_serving),
+        ("serving_load (traffic replay / BENCH_serving_load.json)",
+         bench_serving_load),
         ("solvers (Krylov strategy layer / BENCH_solvers.json)", bench_solvers),
         ("resilience (fault-tolerant serving / BENCH_resilience.json)",
          bench_resilience),
@@ -80,9 +83,12 @@ def main() -> None:
         ("classification (Table 7)", bench_classification),
         ("roofline (§Roofline)", roofline),
     ]
+    if only is not None:
+        # Exact first-token match wins over prefix: --only=serving must run
+        # the serving suite alone, not also serving_load.
+        exact = [s for s in suites if s[0].split(" ", 1)[0] == only]
+        suites = exact if exact else [s for s in suites if s[0].startswith(only)]
     for label, mod in suites:
-        if only is not None and not label.startswith(only):
-            continue
         t0 = time.time()
         try:
             rows = mod.run(fast=fast)

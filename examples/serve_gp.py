@@ -17,10 +17,38 @@ and prints the obs summary table at exit; validate the artifact with
 ``python -m repro.obs.report --validate PATH``.  ``--fit-steps K`` runs K
 LML-ascent steps on the streamed observations first (a noise/lengthscale
 calibration pass) — that is what puts per-solve CG diagnostics into the
-record, since the serving hot path itself is CG-free by design."""
+record, since the serving hot path itself is CG-free by design.
+
+``--mesh N`` re-serves the state over an N-way host device mesh
+(DESIGN.md §3.12): the cached train rows are row-sharded, queries run
+under shard_map, and the script asserts bitwise parity against the
+single-device answers — the CI distributed-serving smoke.  The flag forces
+``--xla_force_host_platform_device_count=N`` before jax initialises, so it
+works on a plain CPU runner:
+
+    PYTHONPATH=src python examples/serve_gp.py --nodes 20000 --mesh 2
+"""
 import argparse
 import contextlib
+import os
+import sys
 import time
+
+# --mesh needs the forced host device count in XLA_FLAGS before the
+# backend initialises — i.e. before jax is imported.
+_mesh_arg = next(
+    (i for i, a in enumerate(sys.argv) if a.startswith("--mesh")), None
+)
+if _mesh_arg is not None:
+    _raw = sys.argv[_mesh_arg]
+    _n = int(_raw.split("=", 1)[1] if "=" in _raw
+             else sys.argv[_mesh_arg + 1])
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_n}"
+        ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 import numpy as np
@@ -39,6 +67,9 @@ def main():
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64,
                     help="engine slots per wave")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the serve state over an N-way host mesh "
+                         "and assert parity with the single-device path")
     ap.add_argument("--record", metavar="PATH", default=None,
                     help="stream a JSONL flight record of the run")
     ap.add_argument("--fit-steps", type=int, default=0,
@@ -174,6 +205,30 @@ def run(args):
     m2, v2 = serving.posterior_moments(state, qnodes[:8].astype(np.int32))
     print(f"  posterior_moments head: mean {np.array(m2)[:3].round(3)}, "
           f"var {np.array(v2)[:3].round(3)}")
+
+    if args.mesh > 1:
+        # Distributed serving smoke: same state, row-sharded over the host
+        # mesh, must answer bit-identically (structural-zero psum).
+        print(f"re-serving over a {args.mesh}-way host mesh ...")
+        sharded = serving.ShardedServeState(state, n_shards=args.mesh)
+        qsub = qnodes[:64].astype(np.int32)
+        ms, vs = sharded.posterior_moments(qsub)
+        m1, v1 = serving.posterior_moments(state, qsub)
+        diff = max(
+            float(np.abs(np.asarray(ms) - np.asarray(m1)).max()),
+            float(np.abs(np.asarray(vs) - np.asarray(v1)).max()),
+        )
+        assert diff == 0.0, \
+            f"sharded moments diverge from single-device (max diff {diff})"
+        fleet = serving.GPFleetLoop(sharded, batch=args.batch)
+        reqs = [serving.GPRequest(nodes=qnodes[i:i + 16])
+                for i in range(0, min(args.queries, 128), 16)]
+        t0 = time.time()
+        fleet.run(reqs)
+        assert all(r.done for r in reqs), "fleet left unanswered queries"
+        print(f"  sharded parity OK (bitwise over {len(qsub)} nodes); "
+              f"fleet answered {fleet.served} queries in "
+              f"{(time.time()-t0)*1e3:.0f} ms")
 
     if obs.enabled():
         # Per-wave latency straight from the registry — the numbers the

@@ -54,6 +54,11 @@ else:
                                out_specs=out_specs, check_rep=False)
 
 
+# The version-compat wrapper is the module's real export surface: the
+# sharded serving path (serving/sharded.py) builds on the same shim.
+shard_map_compat = _shard_map
+
+
 def _data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -27,3 +27,22 @@ def make_host_mesh(n_data: int | None = None, n_model: int = 1):
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes that carry the batch: ('pod', 'data') when a pod axis exists."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_serving_mesh(n_shards: int | None = None):
+    """1-D ``("data",)`` mesh over the first ``n_shards`` devices — the
+    shard layout of :class:`repro.serving.sharded.ShardedServeState`.
+
+    On CPU hosts the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set **before**
+    jax initialises — see tests/test_distributed_gp.py's subprocess
+    pattern)."""
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if n > len(devices):
+        raise ValueError(
+            f"requested {n} serving shards but only {len(devices)} devices "
+            "exist; set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before jax initialises for host meshes"
+        )
+    return jax.make_mesh((n,), ("data",), devices=devices[:n])

@@ -1,13 +1,19 @@
 """Online GP serving: incremental Cholesky state, lazy query-row features,
-and a micro-batching front end (DESIGN.md §3.7)."""
-from . import engine, state, update  # noqa: F401
+a micro-batching front end, and the distributed async fleet
+(DESIGN.md §3.7, §3.12)."""
+from . import engine, fleet, sharded, state, update  # noqa: F401
 from .engine import GPRequest, GPServeLoop, thompson_draw  # noqa: F401
+from .fleet import GPFleetLoop  # noqa: F401
+from .sharded import ShardedServeState  # noqa: F401
 from .state import ServeState, init_state, posterior_moments  # noqa: F401
 from .update import (  # noqa: F401
     forget,
+    forget_batch,
+    forget_batch_async,
     ingest,
     observe,
     observe_batch,
+    observe_batch_async,
     refit,
     refit_alpha,
 )

@@ -209,6 +209,36 @@ def thompson_draw(
     return out
 
 
+def _joint_draw_tail(trace_q, vals_q, mean, v, key, n_samples):
+    """Exact joint MVN draw from the whitened cross-block (shared tail —
+    the sharded engine reuses it verbatim after its psum'd cross-Gram)."""
+    k_qq = dispatch.gram_block(vals_q, trace_q.cols, vals_q, trace_q.cols)
+    cov = k_qq - v.T @ v
+    # Estimator noise can leave tiny negative eigenvalues; a diagonal
+    # jitter scaled to the prior variance keeps the q×q Cholesky SPD.
+    jitter = 1e-6 * jnp.maximum(jnp.max(jnp.diag(k_qq)), 1.0)
+    l_post = jnp.linalg.cholesky(
+        cov + jitter * jnp.eye(cov.shape[0], dtype=cov.dtype)
+    )
+    # Guarded draw: if the jittered Cholesky still fails (a cov matrix
+    # mangled past what jitter fixes), fall back to independent
+    # marginal draws — diag(sqrt(clamped var)) — instead of returning
+    # an all-NaN sample batch.  The joint structure degrades; the BO
+    # loop keeps moving.
+    ok = jnp.all(jnp.isfinite(l_post))
+    obs.tap(
+        "serving.thompson.cov_fallback",
+        (~ok).astype(jnp.int32),
+        kind="counter",
+    )
+    marginal = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diagonal(cov), 0.0)))
+    l_post = jnp.where(ok, l_post, marginal)
+    eps = jax.random.normal(
+        key, (cov.shape[0], n_samples), dtype=jnp.float32
+    )
+    return mean[:, None] + l_post @ eps
+
+
 @partial(jax.jit,
          static_argnames=("n_samples", "spmv_backend", "obs_tap",
                           "fault_plan"))
@@ -217,28 +247,4 @@ def _thompson_draw(state, nodes, key, *, n_samples, spmv_backend,
     with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
             faults.fault_scope(fault_plan):
         trace_q, vals_q, mean, v = _cross_solve(state, nodes)
-        k_qq = dispatch.gram_block(vals_q, trace_q.cols, vals_q, trace_q.cols)
-        cov = k_qq - v.T @ v
-        # Estimator noise can leave tiny negative eigenvalues; a diagonal
-        # jitter scaled to the prior variance keeps the q×q Cholesky SPD.
-        jitter = 1e-6 * jnp.maximum(jnp.max(jnp.diag(k_qq)), 1.0)
-        l_post = jnp.linalg.cholesky(
-            cov + jitter * jnp.eye(cov.shape[0], dtype=cov.dtype)
-        )
-        # Guarded draw: if the jittered Cholesky still fails (a cov matrix
-        # mangled past what jitter fixes), fall back to independent
-        # marginal draws — diag(sqrt(clamped var)) — instead of returning
-        # an all-NaN sample batch.  The joint structure degrades; the BO
-        # loop keeps moving.
-        ok = jnp.all(jnp.isfinite(l_post))
-        obs.tap(
-            "serving.thompson.cov_fallback",
-            (~ok).astype(jnp.int32),
-            kind="counter",
-        )
-        marginal = jnp.diag(jnp.sqrt(jnp.maximum(jnp.diagonal(cov), 0.0)))
-        l_post = jnp.where(ok, l_post, marginal)
-        eps = jax.random.normal(
-            key, (cov.shape[0], n_samples), dtype=jnp.float32
-        )
-        return mean[:, None] + l_post @ eps
+        return _joint_draw_tail(trace_q, vals_q, mean, v, key, n_samples)

@@ -203,27 +203,41 @@ def _posterior_moments(state, query_nodes, *, spmv_backend, obs_tap=False,
         return _moments_impl(state, query_nodes)
 
 
+def _query_features(state: ServeState, query_nodes: jax.Array):
+    """Lazy guarded Φ rows + feature values for ``query_nodes``.
+
+    guard_trace zeroes non-finite payload rows (only staged under an
+    active fault plan): a poisoned query degrades to the prior for that
+    node instead of NaN-ing the whole wave."""
+    trace_q = faults.guard_trace(query_rows(state, query_nodes))
+    return trace_q, features.feature_values(trace_q, state.f)
+
+
+def _mean_whiten(state: ServeState, k_qx: jax.Array):
+    """mean[q] and the whitened cross-block v = L⁻¹ K̂_{x,q} [c, q] from a
+    cross-Gram row block — shared verbatim by the single-device and sharded
+    paths, so their downstream math is bit-identical once k_qx agrees."""
+    mean = k_qx @ state.alpha
+    v = solve_triangular(state.chol, k_qx.T, lower=True)  # [capacity, q]
+    return mean, v
+
+
 def _cross_solve(state: ServeState, query_nodes: jax.Array):
     """The shared query core: lazy rows, cross-Gram, mean, whitened solve.
 
     Returns (trace_q, vals_q, mean[q], v) with v = L⁻¹ K̂_{x,q} [c, q] —
     everything both the marginal moments and the joint Thompson draw need.
     """
-    # guard_trace zeroes non-finite payload rows (only staged under an
-    # active fault plan): a poisoned query degrades to the prior for that
-    # node instead of NaN-ing the whole wave.
-    trace_q = faults.guard_trace(query_rows(state, query_nodes))
-    vals_q = features.feature_values(trace_q, state.f)
+    trace_q, vals_q = _query_features(state, query_nodes)
     k_qx = dispatch.gram_block(
         vals_q, trace_q.cols, state.vals(), state.trace.cols
     )  # [q, capacity]; dead train rows contribute exact zeros
-    mean = k_qx @ state.alpha
-    v = solve_triangular(state.chol, k_qx.T, lower=True)  # [capacity, q]
+    mean, v = _mean_whiten(state, k_qx)
     return trace_q, vals_q, mean, v
 
 
-def _moments_impl(state: ServeState, query_nodes: jax.Array):
-    trace_q, _, mean, v = _cross_solve(state, query_nodes)
+def _moments_tail(state: ServeState, trace_q, mean, v):
+    """Marginal variance from the whitened cross-block (shared tail)."""
     k_qq = features.khat_diag_exact(trace_q, state.f)
     var_raw = k_qq - jnp.sum(v * v, axis=0)
     # K̂ is PSD by construction, so negative posterior variance is pure f32
@@ -236,3 +250,8 @@ def _moments_impl(state: ServeState, query_nodes: jax.Array):
         kind="counter",
     )
     return mean, jnp.maximum(var_raw, 0.0)
+
+
+def _moments_impl(state: ServeState, query_nodes: jax.Array):
+    trace_q, _, mean, v = _cross_solve(state, query_nodes)
+    return _moments_tail(state, trace_q, mean, v)

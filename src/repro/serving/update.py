@@ -166,9 +166,16 @@ def _append(state: ServeState, node, y_t) -> ServeState:
     )
 
 
-@partial(jax.jit, static_argnames=("spmv_backend", "obs_tap", "fault_plan"))
-def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False,
-                   fault_plan=None):
+def _observe_batch_impl(graph, f, sigma_n2, seed, packed, nodes, ys, *, cfg,
+                        spmv_backend, obs_tap=False, fault_plan=None):
+    # The immutable leaves (graph / f / sigma_n2 / seed) ride as separate
+    # arguments so the mutable leaves can be donated as one pytree arg:
+    # donating a buffer that is *also* reachable through a non-donated
+    # argument is undefined, and the state pytree would alias both.
+    state = ServeState(
+        graph=graph, f=f, sigma_n2=sigma_n2, seed=seed, cfg=cfg,
+        **dict(zip(_MUTABLE, packed)),
+    )
     with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend), \
             faults.fault_scope(fault_plan):
         # Scan only over the mutable leaves — the graph arrays stay scan
@@ -203,6 +210,19 @@ def _observe_batch(state, nodes, ys, *, spmv_backend, obs_tap=False,
         )
         return (nodes_b, y_b, count, WalkTrace(*tr), chol,
                 solve_chol(chol, y_b), ov, rej, nrf)
+
+
+_OB_STATICS = ("cfg", "spmv_backend", "obs_tap", "fault_plan")
+_observe_batch = partial(jax.jit, static_argnames=_OB_STATICS)(
+    _observe_batch_impl
+)
+# Donating the mutable leaves lets XLA update the O(capacity²) Cholesky and
+# the ELL rows in place instead of reallocating them per append — after a
+# call the *input* buffers are deleted, so only opt-in async callers
+# (observe_batch_async / GPFleetLoop) use this variant.
+_observe_batch_donated = partial(
+    jax.jit, static_argnames=_OB_STATICS, donate_argnums=(4,)
+)(_observe_batch_impl)
 
 
 def _evict_oldest(state: ServeState, room: int) -> ServeState:
@@ -267,7 +287,8 @@ def observe_batch(
                 obs.inc("serving.observe.evictions", excess)
     with obs.span("serving.observe_batch", n=int(nodes.shape[0])) as sp:
         packed = _observe_batch(
-            state, nodes, ys, spmv_backend=dispatch.get_backend(),
+            state.graph, state.f, state.sigma_n2, state.seed, _pack(state),
+            nodes, ys, cfg=state.cfg, spmv_backend=dispatch.get_backend(),
             obs_tap=obs.enabled(), fault_plan=faults.active(),
         )
         sp.block_on(packed)
@@ -294,6 +315,37 @@ def observe(state: ServeState, node, y, **kwargs) -> ServeState:
     return observe_batch(state, [node], [y], **kwargs)
 
 
+def observe_batch_async(state: ServeState, nodes, ys, *,
+                        donate: bool = True) -> ServeState:
+    """Dispatch a guarded batched append with **no host synchronisation**.
+
+    The fleet's mutation path (DESIGN.md §3.12): the eager
+    :func:`observe_batch` wrapper costs one ``block_on`` plus several
+    ``int(flag)`` device reads per call — each a full sync barrier that
+    serialises the wave pipeline.  This variant returns as soon as the
+    update is dispatched; overflow behaves like ``on_overflow="reject"``
+    (masked drops reported via the jit-safe ``overflow`` flag) and the
+    caller inspects the health flags later, at a point where it blocks
+    anyway (``GPFleetLoop._check_flags``).
+
+    With ``donate=True`` the mutable leaves are donated to XLA, so the
+    O(capacity²) Cholesky and the cached ELL rows are updated in place
+    instead of reallocated per call.  **The input state's mutable buffers
+    are deleted after a donated call** — drop every reference to the old
+    state and use the returned one (the fleet owns its state for exactly
+    this reason)."""
+    nodes = jnp.asarray(nodes, jnp.int32).reshape(-1)
+    ys = jnp.asarray(ys, jnp.float32).reshape(-1)
+    fn = _observe_batch_donated if donate else _observe_batch
+    packed = fn(
+        state.graph, state.f, state.sigma_n2, state.seed, _pack(state),
+        nodes, ys, cfg=state.cfg, spmv_backend=dispatch.get_backend(),
+        obs_tap=obs.enabled(), fault_plan=faults.active(),
+    )
+    obs.inc("serving.observations", int(nodes.shape[0]))
+    return _unpack(state, packed)
+
+
 def _cholupdate(chol: jax.Array, x: jax.Array) -> jax.Array:
     """L̃ with L̃L̃ᵀ = LLᵀ + xxᵀ (LINPACK dchud, columns swept in order).
 
@@ -317,39 +369,68 @@ def _cholupdate(chol: jax.Array, x: jax.Array) -> jax.Array:
     return chol
 
 
-@jax.jit
-def _forget(state: ServeState, slot):
-    c = state.capacity
+def _forget_step(packed, slot):
+    """One downdate on the packed mutable leaves, α left stale.
+
+    The α re-solve is deferred to the caller: forget never *reads* α, so
+    in a run of k forgets the k−1 intermediate solves are unobservable —
+    batching them away is bit-identical to sequential application."""
+    nodes, y, count, trace, chol, alpha, overflow, rejected, needs_refit = \
+        packed
+    c = chol.shape[0]
     idx = jnp.arange(c)
-    m = state.count
     # Shift everything after `slot` up one position (dead fill at the top).
     src = jnp.where(idx >= slot, jnp.minimum(idx + 1, c - 1), idx)
     # Removing row/col `slot` de-factors its outer product: the trailing
     # block satisfies L̃L̃ᵀ = L'L'ᵀ + SSᵀ with S = L[slot+1:, slot].
-    x = jnp.where(idx >= slot, state.chol[:, slot][src], 0.0)
-    chol = _cholupdate(state.chol[src][:, src], x)
-    new_count = m - 1
+    x = jnp.where(idx >= slot, chol[:, slot][src], 0.0)
+    new_chol = _cholupdate(chol[src][:, src], x)
+    new_count = count - 1
     dead = idx >= new_count
-    chol = jnp.where(
-        dead[:, None] | dead[None, :], jnp.eye(c, dtype=chol.dtype), chol
+    new_chol = jnp.where(
+        dead[:, None] | dead[None, :], jnp.eye(c, dtype=new_chol.dtype),
+        new_chol,
     )
     live = ~dead
-    y = jnp.where(live, state.y[src], 0.0)
     return (
-        jnp.where(live, state.nodes[src], 0),
-        y,
+        jnp.where(live, nodes[src], 0),
+        jnp.where(live, y[src], 0.0),
         new_count,
         WalkTrace(
-            cols=jnp.where(live[:, None], state.trace.cols[src], 0),
-            loads=jnp.where(live[:, None], state.trace.loads[src], 0.0),
-            lens=jnp.where(live[:, None], state.trace.lens[src], 0),
+            cols=jnp.where(live[:, None], trace.cols[src], 0),
+            loads=jnp.where(live[:, None], trace.loads[src], 0.0),
+            lens=jnp.where(live[:, None], trace.lens[src], 0),
         ),
-        chol,
-        solve_chol(chol, y),
-        state.overflow,
-        state.rejected,
-        state.needs_refit,
+        new_chol,
+        alpha,
+        overflow,
+        rejected,
+        needs_refit,
     )
+
+
+def _resolve_alpha(packed):
+    nodes, y, count, trace, chol, _, overflow, rejected, needs_refit = packed
+    return (nodes, y, count, trace, chol, solve_chol(chol, y),
+            overflow, rejected, needs_refit)
+
+
+@jax.jit
+def _forget(state: ServeState, slot):
+    return _resolve_alpha(_forget_step(_pack(state), slot))
+
+
+def _forget_batch_impl(packed, slots):
+    out, _ = jax.lax.scan(
+        lambda mut, s: (_forget_step(mut, s), None), packed, slots
+    )
+    return _resolve_alpha(out)
+
+
+_forget_batch = jax.jit(_forget_batch_impl)
+_forget_batch_donated = partial(jax.jit, donate_argnums=(0,))(
+    _forget_batch_impl
+)
 
 
 def forget(state: ServeState, slot) -> ServeState:
@@ -358,6 +439,32 @@ def forget(state: ServeState, slot) -> ServeState:
     Rank-1 Cholesky downdate of the stored factor — O(m²), no
     refactorisation.  Later observations shift up one slot."""
     return _unpack(state, _forget(state, jnp.asarray(slot, jnp.int32)))
+
+
+def forget_batch(state: ServeState, slots) -> ServeState:
+    """Apply a sequence of forgets in ONE scanned dispatch (O(k·m²)).
+
+    Bit-identical to folding :func:`forget` over ``slots`` — each step is
+    the same shift + rank-1 downdate, with the single observable α re-solve
+    done once at the end.  Slot indices are interpreted sequentially, i.e.
+    against the buffer layout *after* the preceding forgets in the batch
+    (``[0, 0]`` drops the two oldest observations)."""
+    return _unpack(state, _forget_batch(
+        _pack(state), jnp.asarray(slots, jnp.int32).reshape(-1)
+    ))
+
+
+def forget_batch_async(state: ServeState, slots, *,
+                       donate: bool = True) -> ServeState:
+    """:func:`forget_batch` without host synchronisation, mutable leaves
+    donated — the fleet's forget path (one dispatch per run of queued
+    forgets instead of one per slot).  Same donation contract as
+    :func:`observe_batch_async`: the input state's mutable buffers are
+    deleted; use the returned state."""
+    fn = _forget_batch_donated if donate else _forget_batch
+    return _unpack(state, fn(
+        _pack(state), jnp.asarray(slots, jnp.int32).reshape(-1)
+    ))
 
 
 @partial(jax.jit, static_argnames=("spmv_backend", "obs_tap"))
@@ -446,8 +553,12 @@ def refit(state: ServeState, f=None, sigma_n2=None, y=None) -> ServeState:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("strategy", "spmv_backend", "obs_tap"))
-def _refit_alpha(state, *, strategy, spmv_backend, obs_tap=False):
+def _refit_alpha_impl(state, alpha0, *, strategy, spmv_backend,
+                      obs_tap=False):
+    # ``alpha0`` rides as its own argument — the wrapper stubs the state's
+    # alpha leaf to a length-0 placeholder — so the donated variant can
+    # alias the warm-start iterate into the solution buffer without the
+    # same buffer also being reachable through the state pytree.
     with obs.tap_scope(obs_tap), dispatch.use_backend(spmv_backend):
         live = state.live_mask()
         gram = dispatch.gram_block(
@@ -456,11 +567,20 @@ def _refit_alpha(state, *, strategy, spmv_backend, obs_tap=False):
         noise = jnp.where(live > 0, state.sigma_n2, 1.0)
         a = gram + jnp.diag(noise)
         sol = solvers.solve(
-            a.__matmul__, state.y, strategy, x0=state.alpha,
+            a.__matmul__, state.y, strategy, x0=alpha0,
             precond=None if strategy.preconditioner == "none"
             else solvers.jacobi_precond(jnp.diagonal(a)),
         )
         return sol.x, sol.iters, jnp.all(sol.converged)
+
+
+_RA_STATICS = ("strategy", "spmv_backend", "obs_tap")
+_refit_alpha = partial(jax.jit, static_argnames=_RA_STATICS)(
+    _refit_alpha_impl
+)
+_refit_alpha_donated = partial(
+    jax.jit, static_argnames=_RA_STATICS, donate_argnums=(1,)
+)(_refit_alpha_impl)
 
 
 def _alpha_ladder(strategy: SolveStrategy) -> list[SolveStrategy]:
@@ -488,6 +608,7 @@ def refit_alpha(
     return_diagnostics: bool = False,
     escalate: bool = False,
     max_attempts: int = 3,
+    donate: bool = False,
 ) -> ServeState:
     """Refresh the representer weights α after a hyperparameter move —
     **without** the O(m³) Cholesky refactorisation.
@@ -507,7 +628,13 @@ def refit_alpha(
     ``max_attempts`` times along :func:`_alpha_ladder` (stronger
     preconditioner, then 4× iteration budgets, warm-started from the best
     iterate), emitting ``solver.escalation`` obs events per attempt — the
-    serving-side twin of ``solvers.solve(..., escalate=True)``."""
+    serving-side twin of ``solvers.solve(..., escalate=True)``.
+
+    With ``donate=True`` each rung donates its warm-start iterate to the
+    solve (the previous α buffer is reused for the new one instead of
+    reallocated).  **This deletes the caller's ``state.alpha`` buffer** —
+    only use it when the input state is discarded for the returned one,
+    as the fleet and the benchmarks do."""
     if strategy is None:
         strategy = solvers.SERVING_DEFAULT
     if strategy.preconditioner == "auto":
@@ -531,13 +658,13 @@ def refit_alpha(
         state = dataclasses.replace(state, **updates)
     rungs = _alpha_ladder(strategy) if escalate else [strategy]
     rungs = rungs[:max_attempts] if escalate else rungs
+    fn = _refit_alpha_donated if donate else _refit_alpha
     with obs.span("serving.refit_alpha") as sp:
+        alpha = state.alpha
+        st = dataclasses.replace(state, alpha=jnp.zeros((0,), jnp.float32))
         for attempt, s in enumerate(rungs):
-            st = state if attempt == 0 else dataclasses.replace(
-                state, alpha=alpha
-            )
-            alpha, iters, converged = _refit_alpha(
-                st, strategy=s, spmv_backend=dispatch.get_backend(),
+            alpha, iters, converged = fn(
+                st, alpha, strategy=s, spmv_backend=dispatch.get_backend(),
                 obs_tap=obs.enabled(),
             )
             if not escalate:

@@ -161,16 +161,20 @@ def test_disabled_faults_leave_hlo_unchanged(setup):
 
     nodes = np.arange(4, dtype=np.int32)
     ys = np.zeros(4, np.float32)
+    ob_args = (empty.graph, empty.f, empty.sigma_n2, empty.seed,
+               serving_update._pack(empty), nodes, ys)
     off_b = serving_update._observe_batch.lower(
-        empty, nodes, ys, spmv_backend="xla", obs_tap=False, fault_plan=None
+        *ob_args, cfg=empty.cfg, spmv_backend="xla", obs_tap=False,
+        fault_plan=None,
     ).as_text()
     with faults.use_faults("chol_fail:0.5"):
         off_b_pinned = serving_update._observe_batch.lower(
-            empty, nodes, ys, spmv_backend="xla", obs_tap=False,
+            *ob_args, cfg=empty.cfg, spmv_backend="xla", obs_tap=False,
             fault_plan=None,
         ).as_text()
     on_b = serving_update._observe_batch.lower(
-        empty, nodes, ys, spmv_backend="xla", obs_tap=False, fault_plan=plan
+        *ob_args, cfg=empty.cfg, spmv_backend="xla", obs_tap=False,
+        fault_plan=plan,
     ).as_text()
     assert off_b == off_b_pinned
     assert on_b != off_b
@@ -282,7 +286,8 @@ def test_overflow_flag_is_jit_safe(setup):
     @jax.jit
     def outer(st, nodes, ys):
         packed = serving_update._observe_batch(
-            st, nodes, ys, spmv_backend="xla"
+            st.graph, st.f, st.sigma_n2, st.seed, serving_update._pack(st),
+            nodes, ys, cfg=st.cfg, spmv_backend="xla"
         )
         return serving_update._unpack(st, packed)
 
@@ -634,3 +639,93 @@ def test_kill_and_recover_chaos(tmp_path):
     assert int(srv.state.count) == int(st.count) + 1
     assert json.loads(open(jpath).readlines()[-1])["seq"] == 6
     srv.close()
+
+
+_FLEET_CHILD = textwrap.dedent("""
+    import jax; jax.config.update("jax_platforms", "cpu")
+    import numpy as np
+    import repro.serving as serving
+    from repro.resilience.journal import Journal
+    from repro.core import modulation, walks
+    from repro.graphs import generators
+
+    g = generators.grid2d(10, 10)
+    cfg = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+    mod = modulation.diffusion(l_max=cfg.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    state = serving.init_state(
+        g, jax.random.PRNGKey(0), f, 0.05, capacity=32, cfg=cfg
+    )
+    fleet = serving.GPFleetLoop(
+        state, batch=8, key=jax.random.PRNGKey(9),
+        journal=Journal(r"{jpath}"),           # donate=True is the default
+    )
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        fleet.submit_observe(rng.integers(0, 100, 2),
+                             rng.standard_normal(2))
+        if i == 2:
+            fleet.submit_forget(0)
+        fleet.submit(serving.GPRequest(
+            nodes=rng.integers(0, 100, 4).astype(np.int32)))
+        fleet.drain()
+    raise SystemExit("kill_at never fired")
+""")
+
+
+def test_fleet_kill_and_recover_chaos(tmp_path):
+    """Chaos through the ASYNC fleet path: the WAL record must be durable
+    before the donated mutation is dispatched — donation deletes the input
+    buffers, so after dispatch the journal is the only copy of the op.
+
+    kill_at:5 fires at the 5th fleet kill_point (the 4th iteration's
+    observe), AFTER its write-ahead record and BEFORE its dispatch: the
+    journal must therefore hold exactly 5 mutation records even though the
+    dead process only ever applied 4, and folding it onto an identically
+    seeded empty state must reproduce the journalled stream."""
+    jpath = str(tmp_path / "fleet_j.jsonl")
+    child = _FLEET_CHILD.format(jpath=jpath)
+    env = dict(
+        os.environ, REPRO_FAULTS="kill_at:5",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + sys.path
+        ),
+        JAX_PLATFORMS="cpu",
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", child], env=env, capture_output=True,
+        text=True, timeout=600,
+    )
+    assert proc.returncode == faults.KILL_EXIT_CODE, proc.stderr
+    assert "hit at 'serving.fleet.observe'" in proc.stderr
+
+    # WAL ahead of dispatch: the killed observe is journalled, undispatched.
+    events = read_journal(jpath)
+    assert [e["type"] for e in events] == (
+        ["observe"] * 3 + ["forget", "observe"]
+    )
+
+    g = generators.grid2d(10, 10)
+    mod = modulation.diffusion(l_max=CFG.l_max)
+    f = mod(mod.init(jax.random.PRNGKey(1)))
+    empty = serving.init_state(
+        g, jax.random.PRNGKey(0), f, 0.05, capacity=32, cfg=CFG
+    )
+    st, n = recover(empty, jpath, None)
+    assert n == len(events)
+    # 4 observes x2 appends, one forget
+    assert int(st.count) == 4 * 2 - 1
+    # recover == the eager fold of the journalled ops, bitwise (replay and
+    # the fleet's donated async path share the same jitted updates)
+    st_ref = empty
+    for ev in events:
+        if ev["type"] == "observe":
+            st_ref = serving.observe_batch(st_ref, ev["nodes"], ev["ys"])
+        else:
+            st_ref = serving.forget(st_ref, ev["slot"])
+    q = np.arange(20, dtype=np.int32)
+    m1, v1 = serving.posterior_moments(st, q)
+    m2, v2 = serving.posterior_moments(st_ref, q)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

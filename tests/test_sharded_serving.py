@@ -1,0 +1,130 @@
+"""Sharded serving (DESIGN.md §3.12): ShardedServeState answers must
+bit-match the single-device path on host meshes.
+
+Runs in a subprocess so the forced multi-device XLA flag never leaks into
+the rest of the suite (the parity is asserted at BOTH 2- and 4-way inside
+one process: the flag forces 4 devices and make_serving_mesh takes a
+prefix)."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, numpy as np
+from repro import serving
+from repro.core import modulation, walks
+from repro.graphs import generators
+from repro.resilience import faults
+
+CFG = walks.WalkConfig(n_walkers=6, p_halt=0.25, l_max=4)
+CAPACITY = 32
+
+g = generators.grid2d(12, 12)
+mod = modulation.diffusion(l_max=CFG.l_max)
+f = mod(mod.init(jax.random.PRNGKey(1)))
+rng = np.random.default_rng(0)
+obs = rng.choice(144, 20, replace=False).astype(np.int32)
+y = rng.standard_normal(20).astype(np.float32)
+empty = serving.init_state(g, jax.random.PRNGKey(0), f, 0.05,
+                           capacity=CAPACITY, cfg=CFG)
+state = serving.ingest(empty, obs, y)
+
+def assert_bitwise(a, b, what):
+    a, b = np.asarray(a), np.asarray(b)
+    assert np.array_equal(a, b), (
+        f"{what}: max diff {np.abs(a - b).max()}"
+    )
+
+def assert_close(a, b, what):
+    # Padded (non-divisible) batches run a differently-shaped compiled
+    # program, so reductions associate differently: fp32 roundoff, not
+    # bitwise.
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6, err_msg=what)
+
+for n_shards in (2, 4):
+    sh = serving.ShardedServeState(state, n_shards=n_shards)
+
+    # 1) posterior moments: bit-match at divisible q, fp32-close when the
+    #    batch is padded (different compiled shape).
+    for q in (16, 8, 7, 1):
+        qnodes = rng.choice(144, q, replace=False).astype(np.int32)
+        ms, vs = sh.posterior_moments(qnodes)
+        m1, v1 = serving.posterior_moments(state, qnodes)
+        check = assert_bitwise if q % n_shards == 0 else assert_close
+        check(ms, m1, f"moments mean {n_shards}w q={q}")
+        check(vs, v1, f"moments var {n_shards}w q={q}")
+
+    # 2) joint Thompson draws bit-match when q divides the mesh.
+    cand = rng.choice(144, 8, replace=False).astype(np.int32)
+    key = jax.random.PRNGKey(7)
+    ds = sh.thompson_draw(cand, key, n_samples=3)
+    d1 = serving.thompson_draw(state, cand, key, n_samples=3)
+    assert_bitwise(ds, d1, f"thompson {n_shards}w")
+
+    # 3) mutations broadcast: parity holds after observe / forget /
+    #    forget_batch on both sides.
+    st2 = serving.observe_batch(state, [3, 77], [0.5, -0.2])
+    st2 = serving.forget(st2, 0)
+    st2 = serving.forget_batch(st2, [1, 0])
+    sh.observe_batch([3, 77], [0.5, -0.2])
+    sh.forget(0)
+    sh.forget_batch([1, 0])
+    qnodes = rng.choice(144, 12, replace=False).astype(np.int32)
+    ms, vs = sh.posterior_moments(qnodes)
+    m1, v1 = serving.posterior_moments(st2, qnodes)
+    assert_bitwise(ms, m1, f"post-forget mean {n_shards}w")
+    assert_bitwise(vs, v1, f"post-forget var {n_shards}w")
+
+    # 4) a faulted append (chol_fail -> needs_refit) answered by the refit
+    #    fallback keeps parity: both sides run the same guarded update +
+    #    O(m^3) refit, the sharded one then re-broadcasts.
+    with faults.use_faults("chol_fail:1"):
+        st3 = serving.observe_batch(st2, [5], [1.0])     # auto refit
+        sh.observe_batch([5], [1.0])
+    assert int(st3.needs_refit) == 0, "fallback did not clear the flag"
+    assert int(sh.state.needs_refit) == 0
+    ms, vs = sh.posterior_moments(qnodes)
+    m1, v1 = serving.posterior_moments(st3, qnodes)
+    assert_bitwise(ms, m1, f"faulted-refit mean {n_shards}w")
+    assert_bitwise(vs, v1, f"faulted-refit var {n_shards}w")
+
+    # 5) the fleet over the sharded state answers the same request stream
+    #    as the sync single-device engine, wave for wave.
+    reqs_nodes = [rng.choice(144, 5, replace=False).astype(np.int32)
+                  for _ in range(4)]
+    sync_loop = serving.GPServeLoop(st3, batch=8, key=jax.random.PRNGKey(9))
+    sync_reqs = sync_loop.run([serving.GPRequest(nodes=nn)
+                               for nn in reqs_nodes])
+    sh2 = serving.ShardedServeState(st3, n_shards=n_shards)
+    fleet = serving.GPFleetLoop(sh2, batch=8, key=jax.random.PRNGKey(9))
+    fleet_reqs = fleet.run([serving.GPRequest(nodes=nn)
+                            for nn in reqs_nodes])
+    for a, b in zip(sync_reqs, fleet_reqs):
+        assert a.done and b.done
+        assert_bitwise(a.mean, b.mean, f"fleet mean {n_shards}w")
+        assert_bitwise(a.var, b.var, f"fleet var {n_shards}w")
+        assert_bitwise(a.draw, b.draw, f"fleet draw {n_shards}w")
+
+# capacity must divide across the mesh
+try:
+    serving.ShardedServeState(state, n_shards=3)
+    raise SystemExit("expected ValueError for capacity % shards != 0")
+except ValueError:
+    pass
+
+print("SHARDED_SERVING_OK")
+"""
+
+
+def test_sharded_serving_parity():
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "SHARDED_SERVING_OK" in res.stdout, res.stdout + res.stderr
